@@ -1,0 +1,24 @@
+"""Fig. 18: per-rank execution profile, LLaMA-7B @ 2M context on the Byted
+mix (paper: naive shows a 4.7× max/min spread; balance flattens it)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import PAPER_HW, simulate
+
+
+def run():
+    t0 = time.perf_counter()
+    _, plans = simulate("llama-7b", "byted", 2_097_152, hdp=256,
+                        hwset=PAPER_HW, tokens=16_000_000,
+                        strategies=("static", "naive", "balance"))
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for name, plan in plans.items():
+        per_rank = np.asarray(plan.stats["per_rank_times"])
+        nz = per_rank[per_rank > 0]
+        derived = (f"max={per_rank.max():.0f}s min={nz.min():.0f}s "
+                   f"std={per_rank.std():.0f}s "
+                   f"maxmin_ratio={per_rank.max()/max(nz.min(),1e-9):.1f}")
+        rows.append((f"fig18.{name}.per_rank", us / 3, derived))
+    return rows

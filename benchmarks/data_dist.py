@@ -1,0 +1,22 @@
+"""Fig. 4: sample/token distribution of the two datasets."""
+import time
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.data.distribution import DISTRIBUTIONS, token_share_above
+
+
+def run():
+    rows = []
+    for name, dist in DISTRIBUTIONS.items():
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        lens = dist.sample_tokens(rng, 32_000_000, 2_097_152)
+        us = (time.perf_counter() - t0) * 1e6
+        arr = np.asarray(lens)
+        derived = (f"samples<=4k={float((arr <= 4096).mean()):.3f}"
+                   f" tokens>=128k={token_share_above(lens, 131072):.3f}"
+                   f" tokens>=2M={token_share_above(lens, 2_000_000):.3f}")
+        rows.append((f"fig4.{name}", us, derived))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 17: end-to-end throughput, {static, naive-HDP, balanced-HDP} ×
+models × context lengths × datasets.  Simulated with the Balance
+Scheduler's own cost model under (a) paper-like A100/IB constants — the
+validation against the paper's claims — and (b) TPU v5e constants — this
+system's expectation (EXPERIMENTS.md discusses the gap)."""
+import time
+
+from benchmarks.common import PAPER_HW, TPU_HW, simulate
+
+CASES = [
+    ("llama-7b", "github", 2_097_152, 256),
+    ("llama-7b", "byted", 2_097_152, 256),
+    ("llama-7b", "github", 262_144, 256),
+    ("llama-13b", "github", 1_048_576, 256),
+    ("llama-70b", "github", 2_097_152, 128),
+    ("mistral-8x7b", "github", 1_048_576, 128),
+]
+
+
+def run():
+    rows = []
+    for hw_name, hwset in (("paperhw", PAPER_HW), ("tpuv5e", TPU_HW)):
+        for model, ds, ctx, hdp in CASES:
+            t0 = time.perf_counter()
+            _, plans = simulate(model, ds, ctx, hdp=hdp, hwset=hwset,
+                                tokens=16_000_000)
+            us = (time.perf_counter() - t0) * 1e6
+            st = plans["static"].stats["makespan"]
+            nv = plans["naive"].stats["makespan"]
+            bl = plans["balance"].stats["makespan"]
+            derived = (f"static_tok/s={4e6/st:.0f}"
+                       f" naive_x={st/nv:.2f} balance_x={st/bl:.2f}")
+            rows.append((f"fig17.{hw_name}.{model}.{ds}.{ctx//1024}K",
+                         us, derived))
+    return rows

@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: Pallas (interpret-mode on CPU — correctness
+path; TPU timings require hardware) vs the jnp reference, plus the
+zigzag-dist-attn balance check (Fig. 14)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.attention import attention_ref
+from repro.data.packing import zigzag_chunks
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+    g, hg, t, s, d = 2, 2, 256, 256, 64
+    q = jnp.array(rng.randn(g, hg, t, d), jnp.float32)
+    k = jnp.array(rng.randn(g, s, d), jnp.float32)
+    v = jnp.array(rng.randn(g, s, d), jnp.float32)
+    seg = jnp.ones(t, jnp.int32)
+    pos = jnp.arange(t)
+
+    fa = jax.jit(lambda *a: ops.flash_attention(*a, d ** -0.5, True, 0,
+                                                0.0, 128, 128))
+    us = timeit(lambda: jax.block_until_ready(
+        fa(q, k, v, seg, seg, pos, pos)))
+    rows.append(("kernel.flash_attention.pallas_interp", us,
+                 f"shape=({g},{hg},{t},{d})"))
+    fr = jax.jit(lambda q, k, v: attention_ref(
+        q.transpose(2, 0, 1, 3), k.transpose(1, 0, 2), v.transpose(1, 0, 2),
+        seg, seg, pos, pos, scale=d ** -0.5, kv_chunk=128))
+    us = timeit(lambda: jax.block_until_ready(fr(q, k, v)))
+    rows.append(("kernel.flash_attention.jnp_ref", us, "oracle path"))
+
+    tt, vv = 256, 8192
+    logits = jnp.array(rng.randn(tt, vv), jnp.bfloat16)
+    labels = jnp.array(rng.randint(0, vv, tt), jnp.int32)
+    ce = jax.jit(ops.fused_softmax_xent)
+    us = timeit(lambda: jax.block_until_ready(ce(logits, labels)))
+    rows.append(("kernel.fused_ce.pallas_interp", us, f"T={tt} V={vv}"))
+    cr = jax.jit(lambda lg, lb: ref.fused_ce_ref(lg, lb)[0])
+    us = timeit(lambda: jax.block_until_ready(cr(logits, labels)))
+    rows.append(("kernel.fused_ce.jnp_ref", us, "oracle path"))
+
+    # Fig. 14: zigzag layout balances the causal-mask area per rank
+    length, group = 65_536, 8
+    t0 = time.perf_counter()
+    areas = []
+    for _, lo, hi in zigzag_chunks(length, group):
+        area = sum(e * e - b * b for b, e in (lo, hi))   # ~mask area ∝ Σpos
+        areas.append(area)
+    us = (time.perf_counter() - t0) * 1e6
+    imb = max(areas) / min(areas)
+    rows.append(("fig14.zigzag_mask_balance", us,
+                 f"area_max/min={imb:.3f} (sequential split would be "
+                 f"{(2*group-1):.0f}x)"))
+    return rows

@@ -1,0 +1,28 @@
+"""Benchmark harness (deliverable d): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is wall time of
+the benchmark unit; ``derived`` carries the figure's headline quantity."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablation, case_study, data_dist, end_to_end,
+                            flops_imbalance, kernel_bench, offload_sweep)
+    rows = []
+    for mod in (data_dist, flops_imbalance, end_to_end, case_study,
+                ablation, offload_sweep, kernel_bench):
+        t0 = time.perf_counter()
+        try:
+            rows.extend(mod.run())
+        except Exception as e:        # keep the harness alive per-figure
+            rows.append((f"{mod.__name__}.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[{mod.__name__}] {time.perf_counter()-t0:.1f}s\n")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

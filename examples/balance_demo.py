@@ -1,0 +1,49 @@
+"""Visualize what the paper is about: plan a skewed 2M-context global batch
+three ways and print the per-rank timeline statistics (Fig. 13/18).
+
+    PYTHONPATH=src python examples/balance_demo.py
+"""
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import offload as OF
+from repro.core.balance import balance_plan
+from repro.core.hdp import CommModel, kv_bytes_per_token, naive_hdp_plan, \
+    static_cp_plan
+from repro.data.distribution import DISTRIBUTIONS
+
+
+def bar(frac, width=40):
+    return "#" * int(frac * width)
+
+
+def main():
+    cfg = get_config("llama-7b")
+    hw = OF.OffloadHW(d2h_bw=12e9, h2d_bw=12e9, peak_flops=300e12)
+    coeffs = OF.analytic_coeffs(cfg, hw)
+    comm = CommModel(kv_bytes_per_token=kv_bytes_per_token(cfg), ici_bw=25e9)
+    rng = np.random.default_rng(7)
+    lens = DISTRIBUTIONS["byted"].sample_tokens(rng, 8_000_000, 2_097_152)
+    print(f"global batch: {len(lens)} sequences, {sum(lens)/1e6:.1f}M tokens,"
+          f" max {max(lens)/1024:.0f}K")
+    kw = dict(capacity=8192, hdp=64, coeffs=coeffs,
+              num_layers=cfg.num_layers, comm=comm)
+    plans = {
+        "static-CP": static_cp_plan(lens, cp_degree=64, **kw),
+        "naive-HDP": naive_hdp_plan(lens, use_offload=False, **kw),
+        "balanced-HDP": balance_plan(lens, mode="dp", **kw),
+    }
+    base = plans["static-CP"].stats["makespan"]
+    for name, plan in plans.items():
+        s = plan.stats
+        per_rank = np.asarray(s["per_rank_times"])
+        print(f"\n== {name}:  makespan {s['makespan']:.0f}s "
+              f"(speedup {base/s['makespan']:.2f}x), "
+              f"{s['n_waves']} waves, bubble {s['bubble_frac']:.1%}")
+        for r in range(0, len(per_rank), len(per_rank) // 8):
+            print(f"  rank {r:3d} |{bar(per_rank[r]/per_rank.max()):40s}| "
+                  f"{per_rank[r]:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

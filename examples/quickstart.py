@@ -1,0 +1,44 @@
+"""Quickstart: build a reduced model, plan an HDP step, train a few waves.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama3.2-3b]
+"""
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.distribution import LengthDistribution
+from repro.data.loader import GlobalScheduler, SyntheticDataset
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import single_device_runtime
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rt = single_device_runtime(remat="none")
+    jax.set_mesh(rt.mesh)
+    print(f"arch={cfg.name}  d_model={cfg.d_model}  layers={cfg.num_layers}  "
+          f"pattern={cfg.layer_pattern}")
+
+    dist = LengthDistribution("demo", 4.5, 0.9, 0.1, 1.5, 1024)
+    ds = SyntheticDataset(dist, cfg.vocab_size, tokens_per_step=8192,
+                          context=2048)
+    sched = GlobalScheduler(ds, cfg, capacity=512, hdp=1,
+                            strategy="balance", use_offload=False)
+    trainer = Trainer(cfg, rt, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                           total_steps=100),
+                      sched, TrainerConfig(capacity=512))
+    for rec in trainer.run(args.steps):
+        print(f"step {rec['step']:3d}  loss {rec['loss']:.4f}  "
+              f"waves {rec['waves']}  plan-bubble {rec['bubble_frac']:.1%}  "
+              f"{rec['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Batched decoding demo: prefill-free autoregressive generation with the
+sharded-cache decode path (flash-decoding combine on real hardware).
+
+    PYTHONPATH=src python examples/serve.py --arch gemma2-9b --tokens 32
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.transformer import init_params
+from repro.parallel.sharding import single_device_runtime
+from repro.train.serve_step import init_decode_cache, make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rt = single_device_runtime(remat="none")
+    jax.set_mesh(rt.mesh)
+    params = init_params(jax.random.PRNGKey(0), cfg, rt)
+    b, horizon = args.batch, args.tokens
+    cache = init_decode_cache(cfg, rt, b, horizon)
+    step = jax.jit(make_decode_step(cfg, rt, b, horizon),
+                   static_argnames=())
+
+    rng = np.random.RandomState(0)
+    tok = jnp.array(rng.randint(0, cfg.vocab_size, b))
+    outs = []
+    for i in range(horizon):
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(logits, axis=-1)
+        outs.append(np.asarray(tok))
+    gen = np.stack(outs, 1)
+    print(f"{cfg.name}: generated {gen.shape} token grid")
+    for row in gen[:2]:
+        print("  ", row[:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md tables from the dry-run / perf JSONLs."""
+import json
+import sys
+
+
+def load(path):
+    rows = {}
+    try:
+        for line in open(path):
+            d = json.loads(line)
+            key = (d["arch"], d["shape"], d.get("seq_parallel", False),
+                   d.get("moe_impl", "gather"))
+            rows[key] = d
+    except FileNotFoundError:
+        pass
+    return rows
+
+
+def gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def main():
+    single = load("results/dryrun_single.jsonl")
+    multi = load("results/dryrun_multi.jsonl")
+    perf = load("results/perf_iters.jsonl")
+
+    out = []
+    out.append("### Dry-run table (single-pod 16×16 = 256 chips; "
+               "multi-pod 2×16×16 = 512 chips)\n")
+    out.append("| arch | shape | comp/meta | waves | live GB/dev | fits v5e-16G"
+               " | multi-pod |")
+    out.append("|---|---|---|---|---|---|---|")
+    for (arch, shape, sp, mi), d in sorted(single.items()):
+        if sp or mi != "gather":
+            continue
+        meta = d.get("composition", d.get("seq_axes", ""))
+        waves = d.get("n_waves", "-")
+        live = d.get("live_bytes_per_dev")
+        live_s = gb(live) if live else "-"
+        m = multi.get((arch, shape, False, "gather"))
+        mstat = "compiles ✓" if m else "—"
+        if m and "live_bytes_per_dev" in m:
+            mstat += f" ({gb(m['live_bytes_per_dev'])} GB/dev)"
+        out.append(f"| {arch} | {shape} | {meta} | {waves} | {live_s} | "
+                   f"{'✓' if d.get('fits_16g_v5e') else '✗'} | {mstat} |")
+
+    out.append("\n### Roofline terms (single-pod, per device per wave/step; "
+               "seconds)\n")
+    out.append("| arch | shape | compute_s | memory_s | collective_s | "
+               "dominant | roofline_frac | useful_flops |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for (arch, shape, sp, mi), d in sorted(single.items()):
+        if sp or mi != "gather" or "dominant" not in d:
+            continue
+        out.append(
+            f"| {arch} | {shape} | {d['compute_s']:.4f} | {d['memory_s']:.4f}"
+            f" | {d['collective_s']:.4f} | {d['dominant']} | "
+            f"{d['roofline_frac']:.3f} | {d['useful_flops_ratio']:.2f} |")
+
+    out.append("\n### Perf iterations (train_4k hillclimb cells)\n")
+    out.append("| arch | variant | compute_s | memory_s | collective_s | "
+               "coll GB/dev | dominant |")
+    out.append("|---|---|---|---|---|---|---|")
+    for (arch, shape, sp, mi), d in sorted(perf.items()):
+        if "dominant" not in d:
+            continue
+        var = []
+        if mi != "gather":
+            var.append(f"moe={mi}")
+        if sp:
+            var.append("seq-parallel")
+        var = "+".join(var) or "baseline(AR×2)"
+        out.append(
+            f"| {arch} | {var} | {d['compute_s']:.4f} | {d['memory_s']:.4f} |"
+            f" {d['collective_s']:.4f} | {gb(d['collective_bytes_per_dev'])} |"
+            f" {d['dominant']} |")
+
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

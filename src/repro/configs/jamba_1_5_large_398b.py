@@ -1,0 +1,28 @@
+"""Jamba-1.5-Large 398B (94B active) [arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536 — Mamba+attention
+1:7 interleave (attention at index 4 of each 8-layer block), MoE 16 experts
+top-2 on every other layer.  Hybrid: runs long_500k.
+"""
+from repro.configs.base import ModelConfig, MoESpec, MambaSpec
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    layer_pattern="mmmmgmmm",    # 1 attention : 7 mamba per 8-layer period
+    pos_embed="none",            # Jamba uses no positional embedding
+    act="silu",
+    gated_mlp=True,
+    moe=MoESpec(num_experts=16, top_k=2, d_expert=24576, moe_period=2,
+                dense_d_ff=24576, router_norm_topk=True),
+    mamba=MambaSpec(d_state=16, d_conv=4, expand=2, chunk_size=256),
+    sub_quadratic=True,
+    norm_eps=1e-5,
+)

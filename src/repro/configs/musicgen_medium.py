@@ -1,0 +1,25 @@
+"""MusicGen-medium backbone [arXiv:2306.05284; hf].
+
+48L d_model=1536 24H (kv=24, i.e. MHA) d_ff=6144 vocab=2048 — decoder-only
+over EnCodec tokens.  The EnCodec frontend is a stub: ``input_specs`` feeds
+precomputed frame embeddings; sinusoidal positions.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    layer_pattern="g",
+    pos_embed="sinusoidal",
+    act="gelu",
+    gated_mlp=False,
+    norm_eps=1e-5,
+    frontend="audio_stub",
+)

@@ -1,0 +1,27 @@
+"""Qwen2-VL-2B backbone [arXiv:2409.12191; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 — M-RoPE, dynamic
+resolution.  The vision frontend is a stub: ``input_specs`` feeds precomputed
+patch embeddings; positions carry the 3-component (t, h, w) M-RoPE ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    layer_pattern="g",
+    pos_embed="mrope",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    act="silu",
+    gated_mlp=True,
+    tie_embeddings=True,
+    frontend="vision_stub",
+)

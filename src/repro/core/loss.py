@@ -1,0 +1,50 @@
+"""Token-level vocab-parallel cross-entropy (ByteScale §5.1 + §7).
+
+Token-level loss: every token in the *global batch* contributes 1/denom,
+where denom = total valid tokens across all micro-batches of the step.
+This is what makes HDP's heterogeneous gradient accumulation bit-equivalent
+to plain DP (paper Eq. 1–2): the trainer passes the same global `denom`
+into every micro-batch's loss.
+
+The reference path computes the log-sum-exp in fp32 over vocab-sharded
+bf16 logits (Megatron VocabParallel style — XLA inserts the cross-model
+max/sum all-reduces).  The fused Pallas kernel (kernels/fused_ce.py)
+replaces the per-shard inner loop on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import logits_head
+from repro.parallel.sharding import Runtime
+
+
+def token_ce_from_logits(logits, labels, valid, denom, *, impl: str = "ref"):
+    """logits [T, V] (any float dtype), labels [T] int32, valid [T] bool.
+
+    Returns (loss, metrics).  loss = Σ_valid nll / denom.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        nll = kernel_ops.fused_softmax_xent(logits, labels)
+    else:
+        lg = logits.astype(jnp.float32)
+        m = jnp.max(lg, axis=-1, keepdims=True)
+        lse = m + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1, keepdims=True))
+        tgt = jnp.take_along_axis(lg, labels[:, None].astype(jnp.int32),
+                                  axis=-1)
+        nll = (lse - tgt)[:, 0]
+    nll = jnp.where(valid, nll, 0.0)
+    nll_sum = jnp.sum(nll)
+    n_tok = jnp.sum(valid.astype(jnp.float32))
+    return nll_sum / denom, {"nll_sum": nll_sum, "tokens": n_tok}
+
+
+def token_ce_loss(params, cfg: ModelConfig, rt: Runtime, hidden, labels, seg,
+                  denom):
+    logits = logits_head(params, cfg, hidden)
+    return token_ce_from_logits(logits, labels, seg > 0, denom,
+                                impl="pallas" if rt.attn_impl == "pallas"
+                                else "ref")

@@ -1,0 +1,137 @@
+"""Selective activation offloading — ByteScale Eq. 3 on TPU.
+
+The cost model is reproduced verbatim; the hardware constants change
+(HBM↔host DMA instead of PCIe D2H/H2D).  Given per-layer compute time
+T(s) = α₁s² + β₁s + γ and activation bytes Act(s) = α₂s + β₂, pick the
+offload ratio r that minimizes the number of HDP ranks D(s) needed for a
+sequence of length s, subject to the transfer being hidden under compute:
+
+    D(s) = ceil( (2·Act(s) + (1-r)(l-2)·Act(s)) / (l·Act(C)) )
+    T(s) ≥ Act(s)·r / min(B_d2h, B_h2d)
+    min(1, l·Act(C) / ((l-2)·Act(s))) ≥ r ≥ 0        (paper's bound)
+
+Execution side: core/models apply the ratio through the remat policy
+``save_and_offload_only_these_names`` — the first round(r·n_periods) layer
+periods offload their residuals to `pinned_host` memory
+(models/transformer.py), reproducing act_ctx's FILO behaviour with XLA's
+host-offload machinery instead of CUDA streams.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class OffloadHW:
+    """TPU-adapted transfer/compute constants."""
+    d2h_bw: float = 25e9           # device->host bytes/s (DMA)
+    h2d_bw: float = 25e9
+    peak_flops: float = 197e12     # bf16
+
+
+@dataclass(frozen=True)
+class CostCoeffs:
+    """T(s) = a1 s^2 + b1 s + g ; Act(s) = a2 s + b2   (per layer, per rank
+    set of tokens s)."""
+    a1: float
+    b1: float
+    g: float
+    a2: float
+    b2: float
+
+
+def analytic_coeffs(cfg: ModelConfig, hw: OffloadHW = OffloadHW(),
+                    mfu: float = 0.5) -> CostCoeffs:
+    """Derive Eq. 3 coefficients from the model config (the Profiler can
+    replace these with measured fits — core/profiler.py)."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    dk = cfg.resolved_head_dim
+    eff = hw.peak_flops * mfu
+    # attention: 4·s²·H·dk flops per layer (fwd QK^T + AV); linear: ~(qkvo +
+    # ffn) ≈ 2·s·(4·d·H·dk + mlp)
+    mlp_flops = 2 * 3 * d * cfg.d_ff if cfg.gated_mlp else 2 * 2 * d * cfg.d_ff
+    a1 = 4.0 * h * dk / eff
+    b1 = (2 * 4 * d * h * dk + mlp_flops) / eff
+    # activations per token per layer (bf16): residual + attn/ffn
+    # checkpoints ~ (2·d + H·dk + d_ff/4) · 2 bytes (remat-lite estimate)
+    act_per_tok = (2 * d + h * dk + cfg.d_ff // 4) * 2
+    return CostCoeffs(a1=a1, b1=b1, g=1e-5, a2=float(act_per_tok), b2=0.0)
+
+
+def act_bytes(c: CostCoeffs, s: float) -> float:
+    return c.a2 * s + c.b2
+
+
+def layer_time(c: CostCoeffs, s: float) -> float:
+    return c.a1 * s * s + c.b1 * s + c.g
+
+
+def max_overlap_ratio(c: CostCoeffs, s: float, hw: OffloadHW) -> float:
+    """Largest r hidden under compute: T(s) ≥ Act(s)·r / min(B)."""
+    bw = min(hw.d2h_bw, hw.h2d_bw)
+    if act_bytes(c, s) <= 0:
+        return 1.0
+    return min(1.0, layer_time(c, s) * bw / act_bytes(c, s))
+
+
+def solve_eq3(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
+              hw: OffloadHW = OffloadHW(), quadratic: bool = True):
+    """Returns (r, D) — offload ratio and min required HDP ranks for a
+    sequence of length s (paper Alg. 1 lines 1–6).
+
+    ``quadratic=False`` zeroes α₁ (attention-free archs like RWKV: linear
+    compute cannot hide linear transfers, so r is bounded by β₁·B/α₂ —
+    DESIGN.md §5)."""
+    c = cfg_or_coeffs if isinstance(cfg_or_coeffs, CostCoeffs) \
+        else analytic_coeffs(cfg_or_coeffs, hw)
+    if not quadratic:
+        c = CostCoeffs(a1=0.0, b1=c.b1, g=c.g, a2=c.a2, b2=c.b2)
+    ell = max(num_layers, 3)
+    if s <= capacity:
+        return 0.0, 1
+    r = max_overlap_ratio(c, s, hw)
+    # paper's upper bound: no point offloading below D(s)=1 territory
+    r_cap = min(1.0, ell * act_bytes(c, capacity)
+                / max((ell - 2) * act_bytes(c, s), 1e-9))
+    r = min(r, 1.0)
+    d = math.ceil((2 * act_bytes(c, s) + (1 - r) * (ell - 2) * act_bytes(c, s))
+                  / (ell * act_bytes(c, capacity)))
+    d_no_offload = math.ceil(act_bytes(c, s) / act_bytes(c, capacity))
+    del r_cap
+    return r, max(1, min(d, d_no_offload))
+
+
+def ratio_for_d(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
+                d: int, hw: OffloadHW = OffloadHW(),
+                quadratic: bool = True):
+    """Smallest offload ratio that makes `d` ranks memory-feasible for a
+    sequence of length s (inverts Eq. 3's D formula); None if infeasible
+    (transfer can't hide under compute)."""
+    c = cfg_or_coeffs if isinstance(cfg_or_coeffs, CostCoeffs) \
+        else analytic_coeffs(cfg_or_coeffs, hw)
+    if not quadratic:
+        c = CostCoeffs(a1=0.0, b1=c.b1, g=c.g, a2=c.a2, b2=c.b2)
+    ell = max(num_layers, 3)
+    act_s = act_bytes(c, s)
+    if act_s <= 0:
+        return 0.0
+    r = 1.0 - (d * ell * act_bytes(c, capacity) - 2 * act_s) \
+        / max((ell - 2) * act_s, 1e-9)
+    if r > 1.0 + 1e-9:
+        return None                     # even full offload can't reach d
+    r = max(0.0, min(1.0, r))
+    if r > max_overlap_ratio(c, s, hw) + 1e-9:
+        return None
+    return r
+
+
+def offload_periods(cfg: ModelConfig, r: float) -> int:
+    """Map a token-level ratio to layer periods whose residuals offload."""
+    period = len(cfg.layer_pattern)
+    head_n = cfg.moe.first_k_dense if cfg.moe else 0
+    n_periods = (cfg.num_layers - head_n) // period
+    return int(round(r * n_periods))

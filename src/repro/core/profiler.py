@@ -1,0 +1,84 @@
+"""The Profiler (ByteScale Fig. 7's third component).
+
+Fits the cost-model coefficients the Communication Optimizer (Eq. 3) and
+Balance Scheduler (Alg. 2) plan with:
+
+    T(s)   = α₁·s² + β₁·s + γ        per-layer step time
+    Act(s) = α₂·s + β₂               per-layer activation bytes
+
+`fit_time_coeffs` least-squares fits measured (length, seconds) samples;
+`profile_model` times real forwards of a config at several lengths (on the
+current backend — on TPU this is the production path; on CPU it calibrates
+the smoke-scale cost model used by tests).  `measure_bandwidths` times
+device<->host transfers for the Eq. 3 overlap constraint.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.offload import CostCoeffs, analytic_coeffs
+
+
+def fit_time_coeffs(lengths: Sequence[int], seconds: Sequence[float],
+                    act_per_token: float, quadratic: bool = True
+                    ) -> CostCoeffs:
+    """Least-squares fit of T(s) = α₁s² + β₁s + γ (α₁ pinned to 0 for
+    attention-free models)."""
+    s = np.asarray(lengths, np.float64)
+    y = np.asarray(seconds, np.float64)
+    cols = [s * s, s, np.ones_like(s)] if quadratic else [s, np.ones_like(s)]
+    a = np.stack(cols, axis=1)
+    coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+    if quadratic:
+        a1, b1, g = coef
+    else:
+        a1, (b1, g) = 0.0, coef
+    return CostCoeffs(a1=max(float(a1), 0.0), b1=max(float(b1), 0.0),
+                      g=max(float(g), 0.0), a2=float(act_per_token), b2=0.0)
+
+
+def profile_model(cfg: ModelConfig, rt, lengths: Sequence[int],
+                  iters: int = 2) -> CostCoeffs:
+    """Time real jitted forwards at several sequence lengths and fit."""
+    from repro.models.transformer import forward_hidden, init_params
+    params = init_params(jax.random.PRNGKey(0), cfg, rt)
+    samples: List[Tuple[int, float]] = []
+    for ln in lengths:
+        batch = {"seg": jnp.ones((ln,), jnp.int32),
+                 "pos": jnp.arange(ln, dtype=jnp.int32)}
+        if cfg.pos_embed == "mrope":
+            batch["pos"] = jnp.stack([batch["pos"]] * 3, -1)
+        if cfg.frontend == "none":
+            batch["tokens"] = jnp.zeros((ln,), jnp.int32)
+        else:
+            batch["embeds"] = jnp.zeros((ln, cfg.d_model), jnp.bfloat16)
+        fn = jax.jit(lambda p, b: forward_hidden(p, cfg, rt, b))
+        jax.block_until_ready(fn(params, batch))          # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(params, batch))
+        samples.append((ln, (time.perf_counter() - t0) / iters
+                        / max(cfg.num_layers, 1)))
+    ana = analytic_coeffs(cfg)
+    return fit_time_coeffs([s for s, _ in samples], [t for _, t in samples],
+                           act_per_token=ana.a2,
+                           quadratic=not cfg.attention_free)
+
+
+def measure_bandwidths(n_bytes: int = 1 << 24) -> Tuple[float, float]:
+    """(d2h, h2d) bytes/s via timed jax.device_put/device_get."""
+    x = jnp.zeros((n_bytes // 4,), jnp.float32)
+    jax.block_until_ready(x)
+    t0 = time.perf_counter()
+    host = np.asarray(x)
+    d2h = n_bytes / max(time.perf_counter() - t0, 1e-9)
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.device_put(host))
+    h2d = n_bytes / max(time.perf_counter() - t0, 1e-9)
+    return d2h, h2d

@@ -1,0 +1,169 @@
+"""Single-controller data pipeline (ByteScale §7 "Remote Dataloader").
+
+The Ray single-controller design maps to:
+  * ``SyntheticDataset``      — the HDFS/server role: deterministic token
+    provider + per-step global-batch length metadata (no raw-data reads are
+    needed to *plan*, exactly the paper's metadata-first design).
+  * ``GlobalScheduler``       — the controller: sees every step's length
+    metadata ahead of time, runs Alg. 1/Alg. 2 and emits (wave plan,
+    loading plan).
+  * ``WaveMaterializer``      — the client role: turns a wave's per-rank
+    piece lists into flat device buffers (tokens/labels/seg/pos), with a
+    background prefetch thread so building wave w+1 overlaps executing w.
+
+Buffers are *global* flat arrays [hdp · capacity · c_mult]; rank r's slice
+is [r·C : (r+1)·C].  Labels are next-token within the original sequence
+(available across piece boundaries since the provider is random-access).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import offload as OF
+from repro.core.balance import balance_plan
+from repro.core.hdp import CommModel, StepPlan, Wave, kv_bytes_per_token, \
+    naive_hdp_plan, static_cp_plan
+from repro.data.distribution import DISTRIBUTIONS, LengthDistribution
+
+
+class SyntheticDataset:
+    """Deterministic random-access corpus with a skewed length mix."""
+
+    def __init__(self, dist: str | LengthDistribution, vocab_size: int,
+                 tokens_per_step: int, context: int, seed: int = 0):
+        self.dist = DISTRIBUTIONS[dist] if isinstance(dist, str) else dist
+        self.vocab = vocab_size
+        self.tokens_per_step = tokens_per_step
+        self.context = context
+        self.seed = seed
+
+    def step_lengths(self, step: int) -> List[int]:
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        return self.dist.sample_tokens(rng, self.tokens_per_step,
+                                       self.context)
+
+    def tokens(self, step: int, seq_id: int, start: int, end: int) -> np.ndarray:
+        """Deterministic pseudo-tokens — reproducible across restarts and
+        re-shardings (a hash, not storage)."""
+        idx = np.arange(start, end, dtype=np.uint64)
+        h = (idx + np.uint64(seq_id) * np.uint64(1_000_000_007)
+             + np.uint64(self.seed) * np.uint64(11_400_714_819_323_198_485))
+        h = (h * np.uint64(2_654_435_761)) ^ (h >> np.uint64(13))
+        return (h % np.uint64(self.vocab)).astype(np.int32)
+
+
+@dataclass
+class LoadedWave:
+    batch: Dict[str, np.ndarray]
+    composition: tuple
+    c_mult: int
+    offload_ratio: float
+    cost_max: float
+
+
+class GlobalScheduler:
+    """The single controller: metadata in, (plan, buffers) out."""
+
+    def __init__(self, dataset: SyntheticDataset, cfg: ModelConfig, *,
+                 capacity: int, hdp: int, mode: str = "dp",
+                 strategy: str = "balance", use_offload: bool = True,
+                 rank_speed: Optional[np.ndarray] = None):
+        self.ds = dataset
+        self.cfg = cfg
+        self.capacity = capacity
+        self.hdp = hdp
+        self.mode = mode
+        self.strategy = strategy
+        self.use_offload = use_offload
+        self.coeffs = OF.analytic_coeffs(cfg)
+        self.comm = CommModel(kv_bytes_per_token=kv_bytes_per_token(cfg))
+        self.rank_speed = rank_speed            # straggler mitigation weights
+        self.quadratic = not cfg.attention_free
+        self.zigzag = not cfg.attention_free    # SSM archs use contiguous
+
+    def plan_step(self, step: int) -> StepPlan:
+        lengths = self.ds.step_lengths(step)
+        kw = dict(capacity=self.capacity, hdp=self.hdp, coeffs=self.coeffs,
+                  num_layers=self.cfg.num_layers, comm=self.comm,
+                  quadratic=self.quadratic, zigzag=self.zigzag)
+        if self.strategy == "static":
+            import math
+            cp = min(self.hdp, 2 ** math.ceil(
+                math.log2(max(1, -(-max(lengths) // self.capacity)))))
+            plan = static_cp_plan(lengths, cp_degree=cp, **kw)
+        elif self.strategy == "naive":
+            plan = naive_hdp_plan(lengths, use_offload=self.use_offload, **kw)
+        else:
+            plan = balance_plan(lengths, mode=self.mode,
+                                use_offload=self.use_offload,
+                                rank_speed=self.rank_speed, **kw)
+        plan.stats["lengths"] = len(lengths)
+        return plan
+
+    def update_rank_speed(self, speed: np.ndarray):
+        """Straggler mitigation: the trainer feeds back EMA per-rank speeds;
+        subsequent plans give slow ranks proportionally less work."""
+        self.rank_speed = speed
+
+
+class WaveMaterializer:
+    def __init__(self, dataset: SyntheticDataset, cfg: ModelConfig,
+                 capacity: int, prefetch: int = 2):
+        self.ds = dataset
+        self.cfg = cfg
+        self.capacity = capacity
+        self.prefetch = prefetch
+
+    def materialize(self, step: int, wave: Wave) -> LoadedWave:
+        c = self.capacity * wave.c_mult
+        hdp = len(wave.slots)
+        t = hdp * c
+        tokens = np.zeros(t, np.int32)
+        labels = np.zeros(t, np.int32)
+        seg = np.zeros(t, np.int32)
+        pos = np.zeros(t, np.int32)
+        for r, slot in enumerate(wave.slots):
+            cursor = r * c
+            for p in slot:
+                n = p.length
+                tokens[cursor:cursor + n] = self.ds.tokens(
+                    step, p.seq_id, p.start, p.end)
+                labels[cursor:cursor + n] = self.ds.tokens(
+                    step, p.seq_id, p.start + 1, p.end + 1)
+                seg[cursor:cursor + n] = p.seq_id + 1
+                pos[cursor:cursor + n] = np.arange(p.start, p.end)
+                cursor += n
+        batch = {"tokens": tokens, "labels": labels, "seg": seg, "pos": pos}
+        if self.cfg.pos_embed == "mrope":
+            batch["pos"] = np.stack([pos] * 3, axis=-1)
+        return LoadedWave(batch=batch, composition=wave.composition,
+                          c_mult=wave.c_mult,
+                          offload_ratio=wave.offload_ratio,
+                          cost_max=max(wave.costs))
+
+    def iter_step(self, step: int, plan: StepPlan) -> Iterator[LoadedWave]:
+        """Prefetching iterator: wave w+1 builds while w executes."""
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+
+        def producer():
+            try:
+                for w in plan.waves:
+                    q.put(self.materialize(step, w))
+            finally:
+                q.put(stop)
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item
+        th.join()

@@ -1,0 +1,305 @@
+"""Pallas TPU flash attention over packed segments (HDP's compute hot-spot).
+
+Layout (ops.py transposes from the model's [T, G, Hg, D]):
+    q    [G, Hg, T, Dk]
+    k    [G, S, Dk]
+    v    [G, S, Dv]
+    q_seg/q_pos [T]; k_seg/k_pos [S]  (int32; segment 0 = padding)
+
+The kernel reproduces core/attention.py's masking exactly (segment
+equality + causal positions + sliding window + Gemma softcap), computing
+online-softmax in fp32 in VMEM scratch.  Forward emits (out, lse) — lse is
+stored for the backward kernels (dq, and dkv with inner q-accumulation).
+
+BlockSpecs tile (Bq × Dk) query and (Bk × Dk/Dv) key/value panels into
+VMEM; the kv axis is the innermost grid dimension so the (acc, m, l)
+scratch carries across kv steps ("arbitrary" dimension semantics).  MXU
+alignment: Bq/Bk default 256/512; head dims are already 64/128/256-aligned
+for every assigned arch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _mask(q_seg, k_seg, q_pos, k_pos, *, causal, window):
+    """[Bq, Bk] boolean mask from per-token metadata blocks."""
+    m = (q_seg[:, None] == k_seg[None, :]) & (q_seg[:, None] > 0) \
+        & (k_seg[None, :] > 0)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _scores(q, k, scale, softcap):
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ()))) * scale              # [Bq, Bk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                out_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+                scale, causal, window, softcap, kv_blocks):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                     # [Bq, Dk]
+    k = k_ref[0]                                        # [Bk, Dk]
+    v = v_ref[0]                                        # [Bk, Dv]
+    s = _scores(q, k, scale, softcap)
+    mask = _mask(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...],
+                 causal=causal, window=window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] \
+        + jax.lax.dot(p.astype(v.dtype), v).astype(jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(j == kv_blocks - 1)
+    def _done():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        out = acc_ref[...] / safe_l[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+        lse = jnp.where(l > 0, m_ref[...] + jnp.log(safe_l), NEG_INF)
+        lse_ref[0, 0] = lse
+
+
+def flash_attention_fwd(q, k, v, q_seg, k_seg, q_pos, k_pos, *, scale,
+                        causal=True, window=0, softcap=0.0,
+                        block_q=256, block_k=512, interpret=True):
+    g, hg, t, dk = q.shape
+    s = k.shape[1]
+    dv = v.shape[-1]
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    assert t % block_q == 0 and s % block_k == 0
+    grid = (g, hg, t // block_q, s // block_k)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_blocks=s // block_k)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dk), lambda g, h, i, j: (g, h, i, 0)),
+            pl.BlockSpec((1, block_k, dk), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, dv), lambda g, h, i, j: (g, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda g, h, i, j: (g, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, hg, t, dv), q.dtype),
+            jax.ShapeDtypeStruct((g, hg, t), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dv), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_seg, k_seg, q_pos, k_pos)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                   out_ref, lse_ref, do_ref, dq_ref, acc_ref, *,
+                   scale, causal, window, softcap, kv_blocks):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0, 0].astype(jnp.float32)
+    out = out_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = jnp.sum(do * out, axis=1)                   # [Bq]
+
+    s_raw = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ()))) * scale
+    if softcap:
+        t_ = jnp.tanh(s_raw / softcap)
+        s = softcap * t_
+        dcap = 1.0 - t_ * t_
+    else:
+        s = s_raw
+        dcap = None
+    mask = _mask(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...],
+                 causal=causal, window=window)
+    p = jnp.exp(jnp.where(mask, s, NEG_INF) - lse[:, None])
+    p = jnp.where(mask, p, 0.0)
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32),
+                             (((1,), (1,)), ((), ())))  # [Bq, Bk]
+    ds = p * (dp - delta[:, None])
+    if softcap:
+        ds = ds * dcap
+    acc_ref[...] += jax.lax.dot(ds, k.astype(jnp.float32)) * scale
+
+    @pl.when(j == kv_blocks - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                    out_ref, lse_ref, do_ref, dk_ref, dv_ref,
+                    dk_acc, dv_acc, *,
+                    scale, causal, window, softcap, q_blocks, hg):
+    # grid: (G, kv_blocks, Hg, q_blocks) — dk/dv accumulate over (Hg, i)
+    h = pl.program_id(2)
+    i = pl.program_id(3)
+
+    @pl.when((h == 0) & (i == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0, 0].astype(jnp.float32)
+    out = out_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = jnp.sum(do * out, axis=1)
+
+    s_raw = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ()))) * scale
+    if softcap:
+        t_ = jnp.tanh(s_raw / softcap)
+        s = softcap * t_
+        dcap = 1.0 - t_ * t_
+    else:
+        s = s_raw
+        dcap = None
+    mask = _mask(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...],
+                 causal=causal, window=window)
+    p = jnp.exp(jnp.where(mask, s, NEG_INF) - lse[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32),
+                             (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None])
+    if softcap:
+        ds = ds * dcap
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ()))) * scale
+
+    @pl.when((h == hg - 1) & (i == q_blocks - 1))
+    def _done():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse, do, *,
+                        scale, causal=True, window=0, softcap=0.0,
+                        block_q=256, block_k=512, interpret=True):
+    g, hg, t, dk_dim = q.shape
+    s = k.shape[1]
+    dv_dim = v.shape[-1]
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+
+    kernel_dq = functools.partial(
+        _bwd_dq_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_blocks=s // block_k)
+    dq = pl.pallas_call(
+        kernel_dq,
+        grid=(g, hg, t // block_q, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dk_dim), lambda g, h, i, j: (g, h, i, 0)),
+            pl.BlockSpec((1, block_k, dk_dim), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv_dim), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+            pl.BlockSpec((1, 1, block_q, dv_dim), lambda g, h, i, j: (g, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda g, h, i, j: (g, h, i)),
+            pl.BlockSpec((1, 1, block_q, dv_dim), lambda g, h, i, j: (g, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dk_dim),
+                               lambda g, h, i, j: (g, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, hg, t, dk_dim), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, dk_dim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse, do)
+
+    kernel_dkv = functools.partial(
+        _bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_blocks=t // block_q, hg=hg)
+    dk, dv = pl.pallas_call(
+        kernel_dkv,
+        grid=(g, s // block_k, hg, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dk_dim), lambda g, j, h, i: (g, h, i, 0)),
+            pl.BlockSpec((1, block_k, dk_dim), lambda g, j, h, i: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv_dim), lambda g, j, h, i: (g, j, 0)),
+            pl.BlockSpec((block_q,), lambda g, j, h, i: (i,)),
+            pl.BlockSpec((block_k,), lambda g, j, h, i: (j,)),
+            pl.BlockSpec((block_q,), lambda g, j, h, i: (i,)),
+            pl.BlockSpec((block_k,), lambda g, j, h, i: (j,)),
+            pl.BlockSpec((1, 1, block_q, dv_dim), lambda g, j, h, i: (g, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda g, j, h, i: (g, h, i)),
+            pl.BlockSpec((1, 1, block_q, dv_dim), lambda g, j, h, i: (g, h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, dk_dim), lambda g, j, h, i: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv_dim), lambda g, j, h, i: (g, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, s, dk_dim), k.dtype),
+            jax.ShapeDtypeStruct((g, s, dv_dim), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, dk_dim), jnp.float32),
+            pltpu.VMEM((block_k, dv_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse, do)
+    return dq, dk, dv

@@ -1,0 +1,126 @@
+"""Pallas fused SoftmaxCrossEntropy (ByteScale §7, Fig. 16).
+
+BF16 logits never materialize in fp32 HBM: vocab panels stream through
+VMEM; max / sum-exp / target-logit accumulate online in fp32 scratch.
+Forward emits (nll, lse) per token; backward streams the same panels to
+produce dlogits = (softmax − onehot)·g without re-reading fp32 logits.
+
+Grid: (T blocks, V blocks), vocab innermost (scratch carries across).
+Final-logit softcapping (Gemma-2) composes: logits are pre-capped by the
+caller; the kernel itself is linear in the logits panel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _fwd_kernel(logits_ref, labels_ref, nll_ref, lse_ref, tgt_ref,
+                m_ref, s_ref, t_ref, *, v_blocks, block_v):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        t_ref[...] = jnp.full_like(t_ref, NEG_INF)
+
+    lg = logits_ref[...].astype(jnp.float32)            # [Bt, Bv]
+    labels = labels_ref[...]                            # [Bt]
+    v0 = j * block_v
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(lg, axis=1))
+    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_cur) \
+        + jnp.sum(jnp.exp(lg - m_cur[:, None]), axis=1)
+    m_ref[...] = m_cur
+    # target logit if the label falls in this panel
+    col = labels - v0
+    in_panel = (col >= 0) & (col < block_v)
+    cols = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    tgt = jnp.sum(jnp.where(cols == col[:, None], lg, 0.0), axis=1)
+    t_ref[...] = jnp.where(in_panel, tgt, t_ref[...])
+
+    @pl.when(j == v_blocks - 1)
+    def _done():
+        lse = m_ref[...] + jnp.log(s_ref[...])
+        lse_ref[...] = lse
+        tgt_ref[...] = t_ref[...]
+        nll_ref[...] = lse - t_ref[...]
+
+
+def _bwd_kernel(logits_ref, labels_ref, lse_ref, g_ref, dlogits_ref, *,
+                block_v):
+    j = pl.program_id(1)
+    lg = logits_ref[...].astype(jnp.float32)
+    labels = labels_ref[...]
+    lse = lse_ref[...]
+    g = g_ref[...]
+    p = jnp.exp(lg - lse[:, None])
+    col = labels - j * block_v
+    cols = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    onehot = (cols == col[:, None]).astype(jnp.float32)
+    dlogits_ref[...] = ((p - onehot) * g[:, None]).astype(dlogits_ref.dtype)
+
+
+def fused_ce_fwd(logits, labels, *, block_t=256, block_v=2048,
+                 interpret=True):
+    t, v = logits.shape
+    block_t = min(block_t, t)
+    block_v = min(block_v, v)
+    assert t % block_t == 0 and v % block_v == 0
+    grid = (t // block_t, v // block_v)
+    kernel = functools.partial(_fwd_kernel, v_blocks=v // block_v,
+                               block_v=block_v)
+    nll, lse, tgt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, labels)
+    return nll, lse, tgt
+
+
+def fused_ce_bwd(logits, labels, lse, g, *, block_t=256, block_v=2048,
+                 interpret=True):
+    t, v = logits.shape
+    block_t = min(block_t, t)
+    block_v = min(block_v, v)
+    grid = (t // block_t, v // block_v)
+    kernel = functools.partial(_bwd_kernel, block_v=block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_v), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, v), logits.dtype),
+        interpret=interpret,
+    )(logits, labels, lse, g)

@@ -1,0 +1,103 @@
+"""jit'd wrappers with custom VJPs around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU-only; interpret mode
+executes kernel bodies in Python for correctness validation).  On real TPU
+set ``repro.kernels.ops.INTERPRET = False`` (or the REPRO_PALLAS_COMPILE=1
+env) — BlockSpecs are already MXU/VMEM-shaped.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import fused_ce as CE
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+# ---------------------------------------------------------------------------
+# flash attention (local/g=1 path), differentiable
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11, 12))
+def flash_attention(q, k, v, q_seg, k_seg, q_pos, k_pos,
+                    scale, causal=True, window=0, softcap=0.0,
+                    block_q=256, block_k=512):
+    """q [G, Hg, T, Dk], k/v [G, S, D*] -> out [G, Hg, T, Dv]."""
+    out, _ = FA.flash_attention_fwd(
+        q, k, v, q_seg, k_seg, q_pos, k_pos, scale=scale, causal=causal,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=INTERPRET)
+    return out
+
+
+def _fa_fwd(q, k, v, q_seg, k_seg, q_pos, k_pos, scale, causal, window,
+            softcap, block_q, block_k):
+    out, lse = FA.flash_attention_fwd(
+        q, k, v, q_seg, k_seg, q_pos, k_pos, scale=scale, causal=causal,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=INTERPRET)
+    return out, (q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse)
+
+
+def _fa_bwd(scale, causal, window, softcap, block_q, block_k, res, do):
+    q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse = res
+    dq, dk, dv = FA.flash_attention_bwd(
+        q, k, v, q_seg, k_seg, q_pos, k_pos, out, lse, do, scale=scale,
+        causal=causal, window=window, softcap=softcap, block_q=block_q,
+        block_k=block_k, interpret=INTERPRET)
+    return dq, dk, dv, None, None, None, None
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_stats(q, k, v, q_seg, k_seg, q_pos, k_pos, *, scale,
+                          causal=True, window=0, softcap=0.0):
+    """(acc, m, l) online-softmax stats in core/attention.py's
+    [T, G, Hg, ...] layout — a drop-in for block_chunked_stats so ring
+    steps can merge kernel outputs (forward / inference paths)."""
+    qt = jnp.transpose(q, (1, 2, 0, 3))          # [G, Hg, T, D]
+    kt = jnp.transpose(k, (1, 0, 2))             # [G, S, Dk]
+    vt = jnp.transpose(v, (1, 0, 2))
+    out, lse = FA.flash_attention_fwd(
+        qt, kt, vt, q_seg, k_seg, q_pos, k_pos, scale=scale, causal=causal,
+        window=window, softcap=softcap, interpret=INTERPRET)
+    # stats with m = lse, l = 1 merge identically to the jnp path:
+    # merge uses acc·e^{m-M}: acc must be the UNnormalized numerator with
+    # its own lse base: acc = out · l where l = e^{lse - m}=1 under m=lse.
+    m = jnp.transpose(lse, (2, 0, 1))            # [T, G, Hg]
+    acc = jnp.transpose(out, (2, 0, 1, 3)).astype(jnp.float32)
+    l = jnp.where(m > FA.NEG_INF / 2, 1.0, 0.0)
+    return acc, m, l
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy, differentiable
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fused_softmax_xent(logits, labels):
+    """logits [T, V] (bf16/f32), labels [T] int32 -> nll [T] fp32."""
+    nll, _, _ = CE.fused_ce_fwd(logits, labels, interpret=INTERPRET)
+    return nll
+
+
+def _ce_fwd(logits, labels):
+    nll, lse, _ = CE.fused_ce_fwd(logits, labels, interpret=INTERPRET)
+    return nll, (logits, labels, lse)
+
+
+def _ce_bwd(res, g):
+    logits, labels, lse = res
+    dlogits = CE.fused_ce_bwd(logits, labels, lse, g.astype(jnp.float32),
+                              interpret=INTERPRET)
+    return dlogits, None
+
+
+fused_softmax_xent.defvjp(_ce_fwd, _ce_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import attention_dense_oracle
+
+
+def flash_attention_ref(q, k, v, q_seg, k_seg, q_pos, k_pos, *, scale,
+                        causal=True, window=0, softcap=0.0):
+    """q [G, Hg, T, Dk], k/v [G, S, D*] -> out [G, Hg, T, Dv] (kernel layout).
+    Delegates to the core dense oracle in its [T, G, Hg, D] layout."""
+    qt = jnp.transpose(q, (2, 0, 1, 3))
+    kt = jnp.transpose(k, (1, 0, 2))
+    vt = jnp.transpose(v, (1, 0, 2))
+    out = attention_dense_oracle(qt, kt, vt, q_seg, k_seg, q_pos, k_pos,
+                                 scale=scale, causal=causal, window=window,
+                                 softcap=softcap)
+    return jnp.transpose(out, (1, 2, 0, 3))
+
+
+def fused_ce_ref(logits, labels):
+    """-> (nll [T], lse [T]) in fp32."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lg - m[:, None]), axis=-1))
+    tgt = jnp.take_along_axis(lg, labels[:, None].astype(jnp.int32),
+                              axis=-1)[:, 0]
+    return lse - tgt, lse
+
+
+def fused_ce_grad_ref(logits, labels, g):
+    """dlogits for loss = sum(nll * g)."""
+    lg = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lg, axis=-1)
+    onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype)

@@ -1,0 +1,326 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(arch × shape × mesh) cell and extract memory / cost / collective data.
+
+The two os.environ lines below MUST stay before any other import: jax locks
+the device count on first init, and only the dry-run wants 512 placeholder
+devices.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --all --multi-pod
+
+`--all` runs each cell in a fresh subprocess (compile-state isolation; a
+single cell failure doesn't kill the sweep).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.configs.registry import dryrun_cells, get_config
+from repro.launch.mesh import hdp_axes_of, make_production_mesh, mesh_chips
+from repro.launch import roofline as RL
+from repro.parallel.sharding import Runtime
+
+DEFAULT_CAPACITY = 8192          # tokens per HDP rank per wave (paper §3.2)
+
+
+# ---------------------------------------------------------------------------
+# wave / input construction
+# ---------------------------------------------------------------------------
+
+def wave_plan(cfg: ModelConfig, shape_name: str, rt: Runtime,
+              capacity: int = DEFAULT_CAPACITY):
+    """(composition, tokens_per_wave, n_waves) for train/prefill shapes."""
+    shape = SHAPES[shape_name]
+    hdp = rt.hdp_size
+    seq = shape.seq_len
+    g = max(1, -(-seq // capacity))                 # ranks per sequence
+    # mixed leftover groups would come from the balance scheduler; the
+    # dry-run lowers the homogeneous steady-state wave
+    while hdp % g != 0:
+        g += 1
+    comp = (g,) * (hdp // g)
+    tokens_per_wave = capacity * hdp
+    total_tokens = shape.seq_len * shape.global_batch
+    n_waves = max(1, total_tokens // tokens_per_wave)
+    return comp, tokens_per_wave, n_waves
+
+
+def wave_batch_structs(cfg: ModelConfig, shape_name: str, rt: Runtime,
+                       capacity: int = DEFAULT_CAPACITY):
+    shape = SHAPES[shape_name]
+    comp, t_wave, n_waves = wave_plan(cfg, shape_name, rt, capacity)
+    i32 = jnp.int32
+    batch = {"seg": jax.ShapeDtypeStruct((t_wave,), i32),
+             "pos": jax.ShapeDtypeStruct(
+                 (t_wave, 3) if cfg.pos_embed == "mrope" else (t_wave,), i32)}
+    if cfg.frontend == "none":
+        batch["tokens"] = jax.ShapeDtypeStruct((t_wave,), i32)
+    else:
+        batch["embeds"] = jax.ShapeDtypeStruct((t_wave, cfg.d_model),
+                                               jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((t_wave,), i32)
+        batch["denom"] = jax.ShapeDtypeStruct((), jnp.float32)
+    else:                                            # prefill
+        batch["last_idx"] = jax.ShapeDtypeStruct(
+            (t_wave // shape.seq_len,), i32)
+    return batch, comp, t_wave, n_waves
+
+
+def needs_fsdp(cfg: ModelConfig, rt: Runtime) -> bool:
+    params_bytes = cfg.param_count() * 2 / rt.tp
+    return params_bytes > 8e9
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               capacity: int = DEFAULT_CAPACITY, remat: str = "full",
+               cfg_override=None, cost_mode: bool = False,
+               seq_parallel: bool = False, moe_impl: str = "gather"):
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.set_mesh(mesh)
+    rt = Runtime(mesh=mesh, hdp_axes=hdp_axes_of(mesh), model_axis="model",
+                 remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl,
+                 # cost lowering: unroll ring steps + period loop + use
+                 # single-block attention so XLA's once-counted while loops
+                 # don't hide FLOPs
+                 cost_unroll=cost_mode,
+                 kv_chunk=capacity if cost_mode else 1024)
+
+    if shape.kind in ("train", "prefill"):
+        batch, comp, t_wave, n_waves = wave_batch_structs(
+            cfg, shape_name, rt, capacity)
+        rt = rt.with_composition(comp)
+        if shape.kind == "train":
+            from repro.optim.adamw import AdamWConfig
+            from repro.train.train_step import jitted_train_step
+            from repro.models.transformer import init_params
+            fsdp = needs_fsdp(cfg, rt)
+            fn = jitted_train_step(cfg, rt, AdamWConfig(), batch, fsdp=fsdp,
+                                   donate=not cost_mode)
+            params_like = jax.eval_shape(
+                lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
+            from repro.optim import adamw
+            opt_like = jax.eval_shape(adamw.init_state, params_like)
+            lowered = fn.lower(params_like, opt_like, batch)
+            tokens = t_wave
+        else:
+            from repro.train.serve_step import make_prefill_step
+            from repro.models.transformer import init_params
+            from repro.parallel.sharding import params_pspecs
+            from repro.train.train_step import batch_pspecs
+            params_like = jax.eval_shape(
+                lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
+            pspecs = params_pspecs(params_like, cfg, rt)
+            bspecs = batch_pspecs(cfg, rt, batch)
+            bspecs["last_idx"] = P()
+            step = make_prefill_step(cfg, rt)
+            lowered = jax.jit(step, in_shardings=(pspecs, bspecs)).lower(
+                params_like, batch)
+            tokens = t_wave
+            fsdp = False
+        meta = {"composition": f"({comp[0]})x{len(comp)}", "n_waves": n_waves,
+                "tokens_per_wave": t_wave, "fsdp": fsdp}
+    else:                                            # decode / long_decode
+        from repro.train.serve_step import (decode_axes, decode_cache_structs,
+                                            decode_cache_pspecs,
+                                            make_decode_step)
+        from repro.models.transformer import init_params
+        from repro.parallel.sharding import params_pspecs
+        b = shape.global_batch
+        s = shape.seq_len
+        rt = rt.with_composition((1,) * rt.hdp_size)
+        params_like = jax.eval_shape(
+            lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
+        pspecs = params_pspecs(params_like, cfg, rt)
+        cache = decode_cache_structs(cfg, rt, b, s)
+        batch_axes, seq_axes = decode_axes(cfg, rt, b)
+        cspecs = decode_cache_pspecs(cache, cfg, rt, batch_axes, seq_axes)
+        step = make_decode_step(cfg, rt, b, s)
+        if cfg.frontend == "none":
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+        else:
+            tok = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+        tok_spec = P(batch_axes if batch_axes else None)
+        lowered = jax.jit(
+            step,
+            in_shardings=(pspecs, cspecs, tok_spec, P()),
+            donate_argnums=() if cost_mode else (1,),
+        ).lower(params_like, cache, tok,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        tokens = b
+        meta = {"batch_axes": str(batch_axes), "seq_axes": str(seq_axes)}
+
+    return cfg, shape, lowered, tokens, meta, mesh
+
+
+def _cost_probe(arch, shape_name, cfg, *, multi_pod, capacity, remat,
+                n_scan_periods: int, seq_parallel=False, moe_impl="gather"):
+    """Compile 1- and 2-period model variants (rings unrolled) and
+    Δ-extrapolate per-device FLOPs/bytes/collective-bytes.
+
+    XLA's cost analysis counts while-loop bodies once and reports per-device
+    numbers post-SPMD, so: total = cost(1p) + (n_periods-1)·(cost(2p) -
+    cost(1p)); every sequential structure that matters (the period scan +
+    its remat transpose, ring steps, KV chunk loops) is either unrolled in
+    cost mode or linear in the period count.
+    """
+    import dataclasses as dc
+    head_n = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    period = len(cfg.layer_pattern)
+    probes = []
+    for k in (1, 3):
+        cfg_k = dc.replace(cfg, num_layers=head_n + period * k)
+        _, _, lowered, _, _, _ = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, capacity=capacity,
+            remat=remat, cfg_override=cfg_k, cost_mode=True,
+            seq_parallel=seq_parallel, moe_impl=moe_impl)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = RL.collective_bytes(compiled.as_text())
+        probes.append({"flops": float(cost.get("flops", 0.0)),
+                       "bytes": float(cost.get("bytes accessed", 0.0)),
+                       "coll": coll})
+    p1, p2 = probes
+    n = n_scan_periods
+
+    def extrap(a, b):
+        delta = (b - a) / 2.0                      # per-period cost
+        return a + delta * (n - 1)
+
+    coll = {k: int(max(0, extrap(p1["coll"][k], p2["coll"][k])))
+            for k in p1["coll"]}
+    return {"flops_per_dev": extrap(p1["flops"], p2["flops"]),
+            "bytes_per_dev": extrap(p1["bytes"], p2["bytes"]),
+            "coll_bytes_per_dev": coll}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             capacity: int = DEFAULT_CAPACITY, skip_roofline: bool = False,
+             remat: str = "full", seq_parallel: bool = False,
+             moe_impl: str = "gather"):
+    t0 = time.time()
+    cfg, shape, lowered, tokens, meta, mesh = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, capacity=capacity,
+        remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    chips = mesh_chips(mesh)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "tokens": tokens, **meta,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": RL.active_param_count(cfg),
+    }
+    if mem is not None:
+        rec["arg_bytes_per_dev"] = int(mem.argument_size_in_bytes)
+        rec["temp_bytes_per_dev"] = int(mem.temp_size_in_bytes)
+        rec["out_bytes_per_dev"] = int(mem.output_size_in_bytes)
+        rec["host_temp_bytes_per_dev"] = int(mem.host_temp_size_in_bytes)
+        rec["alias_bytes_per_dev"] = int(mem.alias_size_in_bytes)
+        # live bytes: args + temps + non-aliased outputs (donation reuses
+        # input buffers for outputs)
+        live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + max(0, mem.output_size_in_bytes - mem.alias_size_in_bytes))
+        rec["live_bytes_per_dev"] = int(live)
+        rec["fits_16g_v5e"] = bool(live < 16e9)
+    if not skip_roofline:
+        head_n = cfg.moe.first_k_dense if cfg.moe is not None else 0
+        n_periods = (cfg.num_layers - head_n) // len(cfg.layer_pattern)
+        probe = _cost_probe(arch, shape_name, cfg, multi_pod=multi_pod,
+                            capacity=capacity, remat=remat,
+                            n_scan_periods=n_periods,
+                            seq_parallel=seq_parallel, moe_impl=moe_impl)
+        terms = RL.roofline_terms(
+            flops_per_dev=probe["flops_per_dev"],
+            bytes_per_dev=probe["bytes_per_dev"],
+            coll_bytes_per_dev=probe["coll_bytes_per_dev"])
+        mf = RL.model_flops(cfg, tokens, shape.kind)
+        terms["model_flops"] = mf
+        glob = probe["flops_per_dev"] * chips
+        terms["hlo_flops_global"] = glob
+        terms["useful_flops_ratio"] = mf / glob if glob else 0.0
+        rec.update(terms)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--capacity", type=int, default=DEFAULT_CAPACITY)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-impl", default="gather")
+    args = ap.parse_args()
+
+    if args.all:
+        ok = fail = 0
+        for arch, shape in dryrun_cells():
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape,
+                   "--capacity", str(args.capacity), "--remat", args.remat]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            if args.skip_roofline:
+                cmd.append("--skip-roofline")
+            if args.out:
+                cmd += ["--out", args.out]
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            status = "OK" if r.returncode == 0 else "FAIL"
+            ok += r.returncode == 0
+            fail += r.returncode != 0
+            print(f"[{status}] {arch} x {shape}", flush=True)
+            if r.returncode != 0:
+                print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+        print(f"dry-run sweep: {ok} ok, {fail} failed")
+        sys.exit(1 if fail else 0)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   capacity=args.capacity, remat=args.remat,
+                   skip_roofline=args.skip_roofline,
+                   seq_parallel=args.seq_parallel, moe_impl=args.moe_impl)
+    rec["seq_parallel"] = args.seq_parallel
+    rec["moe_impl"] = args.moe_impl
+    line = json.dumps(rec)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

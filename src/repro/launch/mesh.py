@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips.
+The HDP axis is ("pod", "data") combined (d_hdp = 32 multi-pod / 16
+single-pod at dry-run scale; arbitrary in production).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def hdp_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,124 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s/link ICI)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+so we divide by chip count).  collective_bytes are parsed from the
+optimized HLO text: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we sum the *operand* sizes (defs are
+resolved from the HLO module).  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D
+(MoE); the useful-flops ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch
+overhead.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_expr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_expr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind over the optimized HLO."""
+    sizes: Dict[str, int] = {}
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_expr, op = m.groups()
+        sizes[name] = _type_bytes(type_expr)
+        base_op = op.rstrip("0123456789.")
+        if base_op.endswith("-start"):
+            base_op = base_op[: -len("-start")]
+        if base_op in _COLLECTIVES:
+            args = line[line.index(op):]
+            operands = re.findall(r"%([\w\.\-]+)", args)
+            ops.append((base_op, operands))
+    out = {k: 0 for k in _COLLECTIVES}
+    for op, operands in ops:
+        total = sum(sizes.get(o, 0) for o in operands)
+        if op == "all-reduce":
+            total *= 2            # ring AR = reduce-scatter + all-gather
+        out[op] += total
+    return out
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """6·N·D uses *active* params for MoE models."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    e = cfg.moe
+    mult = 3  # gated; close enough for the non-gated case too
+    expert_params = 0
+    for i in range(cfg.num_layers):
+        if cfg.is_moe_layer(i):
+            expert_params += e.num_experts * mult * cfg.d_model * e.d_expert
+    active = expert_params * e.top_k / e.num_experts
+    return int(total - expert_params + active)
+
+
+def roofline_terms(*, flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: Dict[str, int]) -> dict:
+    """All inputs are PER-DEVICE (XLA cost analysis reports the post-SPMD
+    per-device program; HLO shapes in the module text are shard shapes).
+    Equivalent to the global formula: global_X / (chips × peak) ==
+    per_dev_X / peak."""
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    total_coll = sum(coll_bytes_per_dev.values())
+    collective_s = total_coll / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s,
+             "collective_bytes_per_dev": total_coll,
+             "collective_breakdown": coll_bytes_per_dev}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom.replace("_s", "")
+    bound = max(compute_s, memory_s, collective_s)
+    terms["roofline_frac"] = (compute_s / bound) if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg: ModelConfig, tokens: int, kind: str) -> float:
+    n = active_param_count(cfg)
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens          # inference fwd only

@@ -1,0 +1,77 @@
+"""Production launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On the CPU container this runs reduced configs end-to-end; on TPU pods the
+same entry point takes ``--mesh 16x16`` / ``--mesh 2x16x16`` and full-size
+configs (jax.distributed initialization is the standard pod runtime).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.distribution import DISTRIBUTIONS, LengthDistribution
+from repro.data.loader import GlobalScheduler, SyntheticDataset
+from repro.launch.mesh import hdp_axes_of, make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import Runtime, single_device_runtime
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--capacity", type=int, default=8192)
+    ap.add_argument("--tokens-per-step", type=int, default=65_536)
+    ap.add_argument("--context", type=int, default=32_768)
+    ap.add_argument("--dataset", default="github",
+                    choices=list(DISTRIBUTIONS) + ["tiny"])
+    ap.add_argument("--strategy", default="balance",
+                    choices=["static", "naive", "balance"])
+    ap.add_argument("--mesh", default="1x1",
+                    help="e.g. 16x16 or 2x16x16 (production)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        args.capacity = min(args.capacity, 512)
+        args.tokens_per_step = min(args.tokens_per_step, 8192)
+        args.context = min(args.context, 2048)
+
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    if dims == (1, 1):
+        rt = single_device_runtime()
+    else:
+        mesh = make_production_mesh(multi_pod=len(dims) == 3)
+        rt = Runtime(mesh=mesh, hdp_axes=hdp_axes_of(mesh),
+                     model_axis="model")
+    jax.set_mesh(rt.mesh)
+
+    dist = DISTRIBUTIONS.get(args.dataset) or \
+        LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, args.tokens_per_step,
+                          args.context)
+    sched = GlobalScheduler(ds, cfg, capacity=args.capacity,
+                            hdp=rt.hdp_size, strategy=args.strategy,
+                            use_offload=False)
+    trainer = Trainer(cfg, rt,
+                      AdamWConfig(lr=args.lr, total_steps=args.steps),
+                      sched, TrainerConfig(capacity=args.capacity,
+                                           ckpt_dir=args.ckpt_dir,
+                                           strategy=args.strategy))
+    if args.ckpt_dir and trainer.resume_if_possible():
+        print(f"resumed at step {trainer.step}")
+    for rec in trainer.run(args.steps - trainer.step):
+        print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
+              f"waves {rec['waves']} wall {rec['wall_s']:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

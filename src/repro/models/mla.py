@@ -1,0 +1,77 @@
+"""DeepSeek-V2 Multi-head Latent Attention in the absorbed-latent form.
+
+Absorption (the standard MLA decode trick, used here for training too):
+    k_nope^h = c_kv @ W_uk^h  =>  q·k_nope = (q_nope @ W_uk^hᵀ) · c_kv
+    out^h    = (attn @ c_kv) @ W_uv^h
+so attention runs against the *shared latent* (G=1, dim kv_lora+qk_rope =
+576 for V2): the HDP ring ships 576 floats/token instead of the expanded
+16×(128+64+128) = 5120 — an 8.9× dist-attn traffic cut (DESIGN.md §5), and
+the decode cache stores only the latent.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_q": L.dense_init(ks[0], d, h * qd, dtype),            # [d, H*(nope+rope)]
+        "w_dkv": L.dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_dim, dtype),
+        "latent_norm": L.rmsnorm_init(m.kv_lora_rank),
+        "w_uk": (jax.random.normal(ks[2], (h, m.qk_nope_dim, m.kv_lora_rank),
+                                   jnp.float32) / math.sqrt(m.qk_nope_dim)).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (h, m.kv_lora_rank, m.v_head_dim),
+                                   jnp.float32) / math.sqrt(m.kv_lora_rank)).astype(dtype),
+        "w_o": L.dense_init(ks[4], h * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_scale(cfg: ModelConfig) -> float:
+    m = cfg.mla
+    return 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+
+
+def mla_qkv(params: dict, cfg: ModelConfig, x: jnp.ndarray, positions):
+    """x [T, d] -> absorbed q [T, H, 512+64], latent kv [T, 1, 512+64].
+
+    v is the latent prefix: use ring_attention(..., v_in_k=(0, kv_lora)).
+    """
+    m = cfg.mla
+    h = cfg.num_heads
+    t = x.shape[0]
+
+    q = (x @ params["w_q"]).reshape(t, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+    ckv = x @ params["w_dkv"]                                    # [T, 512+64]
+    c_kv = L.rmsnorm(params["latent_norm"], ckv[..., :m.kv_lora_rank],
+                     cfg.norm_eps)
+    k_rope = ckv[..., m.kv_lora_rank:]                           # [T, 64]
+
+    # rope on q_rope (per head) and the shared k_rope (single rope head)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope[:, None, :], positions, cfg.rope_theta)[:, 0]
+
+    # absorb W_uk into q:  q_abs = q_nope @ W_uk  -> [T, H, kv_lora]
+    q_abs = jnp.einsum("thn,hnc->thc", q_nope, params["w_uk"])
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)            # [T, H, 576]
+    kv_eff = jnp.concatenate([c_kv, k_rope], axis=-1)[:, None, :]  # [T, 1, 576]
+    return q_eff, kv_eff
+
+
+def mla_output(params: dict, cfg: ModelConfig, attn_lat: jnp.ndarray):
+    """attn_lat [T, H, kv_lora] (attention output over the latent values)
+    -> [T, d] via absorbed W_uv then o-proj."""
+    o = jnp.einsum("thc,hcv->thv", attn_lat, params["w_uv"])     # [T, H, v_dim]
+    t = o.shape[0]
+    return o.reshape(t, -1) @ params["w_o"]

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Design (TPU/SPMD-native, no dynamic shapes):
+  1. router softmax + top-k per token
+  2. position-in-expert via a cumulative count over tokens ([T, E] cumsum)
+  3. scatter tokens into a fixed [E·Cap, d] buffer (gather/scatter are
+     memory ops — unlike a one-hot dispatch-matmul, no O(T²·k) fake FLOPs
+     pollute the roofline)
+  4. batched expert GEMM ([E, Cap, d] × [E, d, d_e]), experts sharded over
+     the TP/EP axis
+  5. gather-combine weighted by the (optionally renormalized) gates
+
+Tokens beyond an expert's capacity are dropped (standard practice; the
+capacity factor is configurable per MoESpec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoESpec
+from repro.models import layers as L
+
+
+def moe_capacity(spec: MoESpec, n_tokens: int) -> int:
+    cap = int(n_tokens * spec.top_k / spec.num_experts * spec.capacity_factor)
+    return max(8, -(-cap // 8) * 8)                      # round up to 8
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    spec = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    mult = 3 if cfg.gated_mlp else 2
+    p = {
+        "router": L.dense_init(ks[0], d, spec.num_experts, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (spec.num_experts, d, spec.d_expert),
+                                   jnp.float32) / jnp.sqrt(d)).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (spec.num_experts, spec.d_expert, d),
+                                    jnp.float32) / jnp.sqrt(spec.d_expert)).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(
+            ks[3], (spec.num_experts, d, spec.d_expert),
+            jnp.float32) / jnp.sqrt(d)).astype(dtype)
+    if spec.num_shared:
+        p["shared_in"] = L.dense_init(ks[4], d, spec.num_shared * spec.d_expert, dtype)
+        p["shared_out"] = L.dense_init(ks[5], spec.num_shared * spec.d_expert, d, dtype)
+        if cfg.gated_mlp:
+            p["shared_gate"] = L.dense_init(ks[6], d, spec.num_shared * spec.d_expert, dtype)
+    del mult
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def moe_forward(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, d] -> [T, d].  Routing math in fp32."""
+    spec = cfg.moe
+    t, d = x.shape
+    e, k = spec.num_experts, spec.top_k
+    cap = moe_capacity(spec, t)
+    act = L.act_fn(cfg.act)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                         # [T, k]
+    if spec.router_norm_topk:
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) pair within its expert
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)             # [T, k, E]
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) - flat_oh             # exclusive
+    pos = jnp.sum(pos_in_e * flat_oh, axis=-1)                   # [T*k]
+    flat_idx = idx.reshape(t * k)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_idx * cap + pos, e * cap)        # overflow slot
+
+    # dispatch: [E*Cap (+1 overflow), d]
+    xk = jnp.repeat(x, k, axis=0)                                # [T*k, d]
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(xk)
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # expert GEMMs (E sharded over the model/EP axis by the caller's specs)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_out"])     # [E, Cap, d]
+
+    # combine: gather each pair's slot, weight by gate, sum over k
+    out_flat = out_buf.reshape(e * cap, d)
+    y_pairs = jnp.take(out_flat, jnp.minimum(slot, e * cap - 1), axis=0)
+    y_pairs = jnp.where(keep[:, None], y_pairs, 0.0)
+    w = gates.reshape(t * k).astype(x.dtype)
+    y = jnp.sum((y_pairs * w[:, None]).reshape(t, k, d), axis=1)
+
+    if spec.num_shared:
+        h_s = x @ params["shared_in"]
+        if cfg.gated_mlp:
+            h_s = act(x @ params["shared_gate"]) * h_s
+        else:
+            h_s = act(h_s)
+        y = y + h_s @ params["shared_out"]
+    return y.astype(x.dtype)
+
+
+def router_aux_stats(params: dict, cfg: ModelConfig, x: jnp.ndarray):
+    """Load-balance diagnostics (fraction of dropped tokens, expert load)."""
+    spec = cfg.moe
+    t = x.shape[0]
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, spec.top_k)
+    counts = jnp.bincount(idx.reshape(-1), length=spec.num_experts)
+    cap = moe_capacity(spec, t)
+    dropped = jnp.sum(jnp.maximum(counts - cap, 0))
+    return {"expert_load": counts, "dropped_frac": dropped / (t * spec.top_k)}

@@ -1,0 +1,54 @@
+"""ZeRO-1 over the HDP axis (ByteScale §5.1, Fig. 8a).
+
+HDP replicates model parameters like DP, so the ZeRO family applies
+unchanged: we shard the optimizer state (fp32 master + Adam moments) over
+the HDP axis on the first dimension that is (a) not already used by tensor
+parallelism and (b) divisible by the HDP size.  Small leaves (norm scales,
+biases) stay replicated — they are noise at these scales.
+
+Under jit, grads are replicated after the DP psum, so XLA compiles the
+update into: dynamic-slice (free) → sharded elementwise Adam → all-gather
+of the bf16 params.  That all-gather is the ZeRO-1 parameter broadcast;
+`compiled.memory_analysis()` in the dry-run shows the 12-byte/param state
+divided by d_hdp.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Runtime
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], rt: Runtime) -> P:
+    """Augment a param PartitionSpec with HDP sharding on the first free,
+    divisible dimension."""
+    hdp = rt.hdp_size
+    if hdp <= 1:
+        return spec
+    # already HDP-sharded (FSDP params): nothing to add
+    flat = [a for e in spec for a in ((e,) if not isinstance(e, tuple) else e)]
+    if any(a in rt.hdp_axes for a in flat if a):
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % hdp == 0 and dim > 0:
+            entries[i] = rt.hdp_axes if len(rt.hdp_axes) > 1 else rt.hdp_axes[0]
+            return P(*entries)
+    return spec                                        # small leaf: replicated
+
+
+def opt_state_pspecs(param_pspecs, params, rt: Runtime):
+    """Pytree of specs for optim.adamw state given the params' specs."""
+    def per_leaf(spec, p):
+        return zero1_spec(spec, p.shape, rt)
+
+    leaf_specs = jax.tree.map(per_leaf, param_pspecs, params)
+    return {
+        "step": P(),
+        "master": leaf_specs,
+        "m": leaf_specs,
+        "v": leaf_specs,
+    }

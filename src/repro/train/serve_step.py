@@ -1,0 +1,311 @@
+"""Serving steps: prefill over packed buffers, decode against sharded caches.
+
+Decode cache sharding (DESIGN.md §4):
+  * decode_32k:  batch → HDP axes, cache seq → model axis; attention uses the
+    flash-decoding (m, l, acc)-psum combine (core/ring.py), which works for
+    any GQA head count without head sharding.
+  * long_500k:   global_batch=1 → cache seq sharded over *all* axes.
+  * sliding-window layers keep ring-buffer caches of length `window`
+    (beyond-paper memory optimization; a 5:1 local:global Gemma-3 cache
+    shrinks ~25×).
+SSM layers cache O(1) state (Mamba conv+h, RWKV wkv state) — that is what
+makes `long_500k` feasible for rwkv6/jamba only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import ring as R
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv6 as RW
+from repro.models.transformer import (embed_tokens, head_layer_count,
+                                      logits_head)
+from repro.parallel.sharding import Runtime
+
+AxisNames = Tuple[str, ...]
+
+
+def decode_axes(cfg: ModelConfig, rt: Runtime, batch: int):
+    """(batch_axes, seq_axes) for the decode cache."""
+    if batch >= rt.hdp_size:
+        return rt.hdp_axes, (rt.model_axis,)
+    return (), rt.hdp_axes + (rt.model_axis,)
+
+
+def _layer_cache_len(cfg: ModelConfig, layer_idx: int, seq_len: int) -> int:
+    code = cfg.layer_code(layer_idx)
+    if code == "l" and cfg.window:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _layer_cache_struct(cfg: ModelConfig, rt: Runtime, layer_idx: int,
+                        batch: int, seq_len: int):
+    code = cfg.layer_code(layer_idx)
+    dt = L.activation_dtype(cfg)
+    if code in ("g", "l"):
+        s = _layer_cache_len(cfg, layer_idx, seq_len)
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"kv_lat": jax.ShapeDtypeStruct(
+                (batch, s, 1, m.kv_lora_rank + m.qk_rope_dim), dt)}
+        g, dk = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {"k": jax.ShapeDtypeStruct((batch, s, g, dk), dt),
+                "v": jax.ShapeDtypeStruct((batch, s, g, dk), dt)}
+    if code == "m":
+        ms, d_in, _ = MB.mamba_dims(cfg)
+        return {"conv": jax.ShapeDtypeStruct((batch, ms.d_conv - 1, d_in), dt),
+                "h": jax.ShapeDtypeStruct((batch, d_in, ms.d_state),
+                                          jnp.float32)}
+    # rwkv
+    rs = cfg.rwkv
+    h = cfg.d_model // rs.head_size
+    return {"s": jax.ShapeDtypeStruct((batch, h, rs.head_size, rs.head_size),
+                                      jnp.float32),
+            "x_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), dt),
+            "x_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), dt)}
+
+
+def decode_cache_structs(cfg: ModelConfig, rt: Runtime, batch: int,
+                         seq_len: int) -> dict:
+    head_n = head_layer_count(cfg)
+    period = len(cfg.layer_pattern)
+    n_periods = (cfg.num_layers - head_n) // period
+
+    def stack(struct):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_periods,) + s.shape, s.dtype),
+            struct)
+
+    return {
+        "head_layers": [
+            _layer_cache_struct(cfg, rt, i, batch, seq_len)
+            for i in range(head_n)],
+        "blocks": [
+            stack(_layer_cache_struct(cfg, rt, head_n + j, batch, seq_len))
+            for j in range(period)],
+    }
+
+
+def _cache_leaf_spec(path_last: str, shape, cfg, rt, batch_axes, seq_axes):
+    model = rt.model_axis
+    if path_last in ("k", "v", "kv_lat"):
+        return P(batch_axes if batch_axes else None, seq_axes, None, None)
+    if path_last == "conv":
+        return P(batch_axes if batch_axes else None, None, model)
+    if path_last == "h":
+        return P(batch_axes if batch_axes else None, model, None)
+    if path_last == "s":
+        return P(batch_axes if batch_axes else None, model, None, None)
+    return P(batch_axes if batch_axes else None, None)      # x_tm / x_cm
+
+
+def decode_cache_pspecs(cache_structs, cfg: ModelConfig, rt: Runtime,
+                        batch_axes: AxisNames, seq_axes: AxisNames):
+    def rule(path, leaf):
+        last = None
+        for p in path:
+            if hasattr(p, "key"):
+                last = str(p.key)
+        # stacked block caches carry a leading period dim
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        spec = _cache_leaf_spec(last, leaf.shape, cfg, rt, batch_axes,
+                                seq_axes)
+        return P(None, *spec) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_structs)
+
+
+def init_decode_cache(cfg: ModelConfig, rt: Runtime, batch: int,
+                      seq_len: int):
+    structs = decode_cache_structs(cfg, rt, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
+
+
+# ---------------------------------------------------------------------------
+# decode blocks
+# ---------------------------------------------------------------------------
+
+def _decode_attention(bp, cache, cfg: ModelConfig, rt: Runtime, x, pos,
+                      layer_idx: int, batch_axes, seq_axes, seq_len: int):
+    b = x.shape[0]
+    code = cfg.layer_code(layer_idx)
+    s_l = _layer_cache_len(cfg, layer_idx, seq_len)
+    slot = pos % s_l
+    filled = jnp.minimum(pos + 1, s_l)
+    pos_b = jnp.full((b,), pos, jnp.int32)
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        q_eff, kv_eff = MLA.mla_qkv(bp, cfg, x, pos_b)          # [B,H,576],[B,1,576]
+        kv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv_lat"], kv_eff[:, None].astype(cache["kv_lat"].dtype),
+            slot, axis=1)
+        out = R.decode_attention_sharded(
+            q_eff[:, None, :, :], kv_cache,
+            kv_cache[..., :m.kv_lora_rank],
+            jnp.full((b,), filled, jnp.int32),
+            mesh=rt.mesh, batch_axes=batch_axes, seq_axes=seq_axes,
+            scale=MLA.mla_scale(cfg), softcap=cfg.attn_softcap)
+        out = out[:, 0]                                          # [B,H,512]
+        return MLA.mla_output(bp, cfg, out), {"kv_lat": kv_cache}
+
+    layout = rt.layout(cfg)
+    dk = cfg.resolved_head_dim
+    g = cfg.num_kv_heads
+    q = (x @ bp["w_q"]).reshape(b, layout.h_pad, dk)
+    kv = jnp.einsum("bd,dsgk->bsgk", x, bp["w_kv"])
+    k_new, v_new = kv[:, 0], kv[:, 1]
+    if cfg.qk_norm:
+        q = L.qk_head_norm(bp["q_norm"], q, cfg.norm_eps)
+        k_new = L.qk_head_norm(bp["k_norm"], k_new, cfg.norm_eps)
+    q, k_new = L.positional_rotate(
+        cfg, q, k_new,
+        pos_b if cfg.pos_embed != "mrope" else jnp.stack([pos_b] * 3, -1),
+        pos_b if cfg.pos_embed != "mrope" else jnp.stack([pos_b] * 3, -1))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new[:, None].astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new[:, None].astype(cache["v"].dtype), slot, axis=1)
+    qg = q.reshape(b, g, layout.hpg_pad, dk)
+    out = R.decode_attention_sharded(
+        qg, k_cache, v_cache, jnp.full((b,), filled, jnp.int32),
+        mesh=rt.mesh, batch_axes=batch_axes, seq_axes=seq_axes,
+        scale=dk ** -0.5, softcap=cfg.attn_softcap)
+    out = out.reshape(b, layout.h_pad, dk)
+    if layout.pad_heads:
+        out = out * layout.head_mask()[None, :, None].astype(out.dtype)
+    return out.reshape(b, -1) @ bp["w_o"], {"k": k_cache, "v": v_cache}
+
+
+def _decode_block(bp, cache, cfg: ModelConfig, rt: Runtime, x, pos,
+                  layer_idx: int, batch_axes, seq_axes, seq_len: int):
+    code = cfg.layer_code(layer_idx)
+    new_cache = {}
+    h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    if code in ("g", "l"):
+        h, new_cache = _decode_attention(
+            bp["attn"], cache, cfg, rt, h, pos, layer_idx, batch_axes,
+            seq_axes, seq_len)
+    elif code == "m":
+        h, mc = MB.mamba_decode_step(bp["mamba"], cfg, h,
+                                     {"conv": cache["conv"], "h": cache["h"]})
+        new_cache.update(mc)
+    else:
+        h, rc = RW.rwkv_decode_step(bp["time_mix"], cfg, h,
+                                    {"s": cache["s"], "x_tm": cache["x_tm"]})
+        new_cache["s"] = rc["s"]
+        new_cache["x_tm"] = rc["x_tm"].astype(cache["x_tm"].dtype)
+    if cfg.post_block_norm:
+        h = L.rmsnorm(bp["postnorm1"], h, cfg.norm_eps)
+    x = x + h.astype(x.dtype)
+
+    h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    if code == "r":
+        hn = h                                   # normed input, cached for t+1
+        xp = cache["x_cm"]
+        xk = hn + bp["channel_mix"]["mix_k"] * (xp - hn)
+        kk = jnp.square(jax.nn.relu(xk.astype(hn.dtype) @ bp["channel_mix"]["w_k"]))
+        h = kk @ bp["channel_mix"]["w_v"]
+        new_cache["x_cm"] = hn.astype(cache["x_cm"].dtype)
+    elif "moe" in bp:
+        h = MOE.moe_forward(bp["moe"], cfg, h)
+    else:
+        from repro.models.transformer import _ffn_block
+        h = _ffn_block(bp["mlp"], cfg, h)
+    if cfg.post_block_norm:
+        h = L.rmsnorm(bp["postnorm2"], h, cfg.norm_eps)
+    return x + h.astype(x.dtype), new_cache
+
+
+def make_decode_step(cfg: ModelConfig, rt: Runtime, batch: int, seq_len: int):
+    batch_axes, seq_axes = decode_axes(cfg, rt, batch)
+    head_n = head_layer_count(cfg)
+    period = len(cfg.layer_pattern)
+
+    def decode_step(params, cache, tokens_or_embeds, pos):
+        """tokens [B] int32 (or embeds [B, d]); pos: scalar int32 position.
+        Returns (logits [B, V], new cache)."""
+        if cfg.frontend == "none":
+            x = embed_tokens(params, cfg, tokens_or_embeds)
+        else:
+            x = tokens_or_embeds
+            if cfg.embed_scale:
+                x = x * math.sqrt(cfg.d_model)
+        if cfg.pos_embed == "sinusoidal":
+            b = x.shape[0]
+            x = x + L.sinusoidal_embedding(
+                jnp.full((b,), pos, jnp.int32), cfg.d_model).astype(x.dtype)
+
+        new_head_caches = []
+        for i, bp in enumerate(params["head_blocks"]):
+            x, nc = _decode_block(bp, cache["head_layers"][i], cfg, rt, x,
+                                  pos, i, batch_axes, seq_axes, seq_len)
+            new_head_caches.append(nc)
+
+        # caches ride in the scan CARRY with in-place dynamic_update_slice
+        # per period: the while-loop buffer updates in place, so decode has
+        # no second cache copy in temps (donation aliases input to output).
+        stacked_caches = tuple(cache["blocks"])
+        n_periods = jax.tree.leaves(params["blocks"])[0].shape[0]
+
+        def period_body(carry, i):
+            x, caches = carry
+            bps = jax.tree.map(lambda a: a[i], tuple(params["blocks"]))
+            for j in range(period):
+                cache_j = jax.tree.map(lambda a: a[i], caches[j])
+                x, nc = _decode_block(bps[j], cache_j, cfg, rt, x, pos,
+                                      head_n + j, batch_axes, seq_axes,
+                                      seq_len)
+                upd = jax.tree.map(
+                    lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                        buf, new.astype(buf.dtype), i, axis=0),
+                    caches[j], nc)
+                caches = caches[:j] + (upd,) + caches[j + 1:]
+            return (x, caches), None
+
+        if rt.cost_unroll:
+            carry = (x, stacked_caches)
+            for i in range(n_periods):
+                carry, _ = period_body(carry, jnp.int32(i))
+            x, new_block_caches = carry
+        else:
+            (x, new_block_caches), _ = jax.lax.scan(
+                period_body, (x, stacked_caches), jnp.arange(n_periods))
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_head(params, cfg, x)
+        return logits, {"head_layers": new_head_caches,
+                        "blocks": list(new_block_caches)}
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime):
+    from repro.models.transformer import forward_hidden
+
+    def prefill_step(params, batch):
+        """Packed-buffer forward; returns logits at each sequence's last
+        token (batch["last_idx"] [B])."""
+        h = forward_hidden(params, cfg, rt, batch)
+        hl = jnp.take(h, batch["last_idx"], axis=0)
+        return logits_head(params, cfg, hl)
+
+    return prefill_step

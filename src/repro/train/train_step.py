@@ -1,0 +1,110 @@
+"""Train / gradient-accumulation steps over HDP waves.
+
+A *wave* is one SPMD micro-batch call: every HDP rank holds exactly C
+tokens (packed + padded by the planner), and the wave's ring composition is
+a static argument — each distinct composition is one compiled executable
+(the TPU analogue of ByteScale's dynamic NCCL groups; see core/ring.py).
+
+Token-level loss (paper Eq. 1–2): every wave divides by the same global
+`denom` (total valid tokens in the global batch), so accumulating grads
+over heterogeneous waves is bit-equivalent to plain DP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.loss import token_ce_loss
+from repro.models.transformer import forward_hidden, init_params
+from repro.optim import adamw
+from repro.parallel.sharding import Runtime, params_pspecs
+from repro.parallel.zero1 import opt_state_pspecs
+
+
+def loss_fn(params, cfg: ModelConfig, rt: Runtime, batch):
+    hidden = forward_hidden(params, cfg, rt, batch)
+    return token_ce_loss(params, cfg, rt, hidden, batch["labels"],
+                         batch["seg"], batch["denom"])
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg: adamw.AdamWConfig):
+    """Fused single-wave step: grad + optimizer apply (used by the dry-run
+    and by single-wave steps)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, rt, batch), has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state,
+                                                    opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_accum_steps(cfg: ModelConfig, rt: Runtime,
+                     opt_cfg: adamw.AdamWConfig):
+    """(grad_step, apply_step) for multi-wave gradient accumulation.
+
+    ``grad_step`` is re-jitted per ring composition (rt.with_composition);
+    ``apply_step`` runs once per global batch.
+    """
+
+    def grad_step(params, grad_accum, batch, rt_wave: Runtime):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, rt_wave, batch), has_aux=True)(params)
+        grad_accum = jax.tree.map(jnp.add, grad_accum, grads)
+        return grad_accum, {"loss": loss, **metrics}
+
+    def apply_step(params, opt_state, grad_accum):
+        params, opt_state, om = adamw.apply_updates(
+            params, grad_accum, opt_state, opt_cfg)
+        return params, opt_state, om
+
+    return grad_step, apply_step
+
+
+# ---------------------------------------------------------------------------
+# sharding-annotated jit wrappers (used by the launcher & dry-run)
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, rt: Runtime, batch_like) -> dict:
+    hdp = rt.hdp_axes
+    specs = {}
+    for k, v in batch_like.items():
+        if k == "denom":
+            specs[k] = P()
+        elif k == "embeds":
+            specs[k] = P(hdp, None)
+        elif k == "pos" and getattr(v, "ndim", 1) == 2:
+            specs[k] = P(hdp, None)
+        else:
+            specs[k] = P(hdp)
+    return specs
+
+
+def jitted_train_step(cfg: ModelConfig, rt: Runtime,
+                      opt_cfg: adamw.AdamWConfig, batch_like, *,
+                      fsdp: bool = False, donate: bool = True):
+    """jit(train_step) with explicit in/out shardings.  ``batch_like`` may be
+    ShapeDtypeStructs (dry-run) or concrete arrays."""
+    params_like = jax.eval_shape(
+        lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
+    pspecs = params_pspecs(params_like, cfg, rt)
+    if fsdp:
+        from repro.parallel.zero1 import zero1_spec
+        pspecs = jax.tree.map(
+            lambda s, p: zero1_spec(s, p.shape, rt), pspecs, params_like)
+    ospecs = opt_state_pspecs(pspecs, params_like, rt)
+    bspecs = batch_pspecs(cfg, rt, batch_like)
+
+    step = make_train_step(cfg, rt, opt_cfg)
+    return jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs, bspecs),
+        out_shardings=(pspecs, ospecs, None),
+        donate_argnums=(0, 1) if donate else ())

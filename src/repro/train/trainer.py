@@ -1,0 +1,146 @@
+"""The training loop: HDP waves + gradient accumulation + fault tolerance.
+
+Per step (paper Fig. 7): the GlobalScheduler plans the global batch into
+waves (Alg. 1/2); each wave dispatches through a per-(composition, c_mult,
+offload) jitted executable (the compile cache is ByteScale's NCCL-group
+cache analogue); gradients accumulate with token-level loss scaling and the
+optimizer applies once (Eq. 2 — bit-equivalent to plain DP).
+
+Fault tolerance: periodic async checkpoints (atomic + hash-verified) with
+auto-resume; ``resize()`` re-plans for a different HDP size (parameters are
+replicated over HDP, so elastic scaling only re-shards optimizer state);
+per-rank wave-time EMAs feed the scheduler's straggler weights.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core.offload import offload_periods
+from repro.data.loader import GlobalScheduler, WaveMaterializer
+from repro.models.transformer import init_params
+from repro.optim import adamw
+from repro.parallel.sharding import Runtime
+from repro.train.train_step import make_accum_steps
+
+
+@dataclass
+class TrainerConfig:
+    capacity: int = 512
+    steps: int = 10
+    ckpt_every: int = 5
+    ckpt_dir: Optional[str] = None
+    mode: str = "dp"                 # balance mode
+    strategy: str = "balance"        # static | naive | balance
+    use_offload: bool = False        # offload remat needs pinned_host support
+    straggler_ema: float = 0.5
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, rt: Runtime, opt_cfg: adamw.AdamWConfig,
+                 scheduler: GlobalScheduler, tcfg: TrainerConfig,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.rt = rt
+        self.opt_cfg = opt_cfg
+        self.sched = scheduler
+        self.tcfg = tcfg
+        assert scheduler.hdp == rt.hdp_size, \
+            (scheduler.hdp, rt.hdp_size, "plan world must match mesh")
+        self.loader = WaveMaterializer(scheduler.ds, cfg, tcfg.capacity)
+        self.params = init_params(jax.random.PRNGKey(seed), cfg, rt)
+        self.opt_state = adamw.init_state(self.params)
+        self.step = 0
+        self.grad_step, self.apply_step = make_accum_steps(cfg, rt, opt_cfg)
+        self._exec_cache: Dict[Tuple, object] = {}
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        self.rank_times = np.zeros(rt.hdp_size)
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def _wave_fn(self, composition, c_mult, offload_ratio):
+        key = (composition, c_mult, round(offload_ratio, 2))
+        if key not in self._exec_cache:
+            rt_wave = self.rt.with_composition(composition)
+            if self.tcfg.use_offload and offload_ratio > 0:
+                import dataclasses as dc
+                rt_wave = dc.replace(
+                    rt_wave, remat="offload",
+                    offload_periods=offload_periods(self.cfg, offload_ratio))
+            self._exec_cache[key] = jax.jit(
+                lambda p, g, b: self.grad_step(p, g, b, rt_wave))
+        return self._exec_cache[key]
+
+    def resume_if_possible(self):
+        if self.ckpt is None:
+            return False
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        self.params, self.opt_state, data_state = self.ckpt.restore(
+            latest, self.params, self.opt_state)
+        self.step = int(data_state["step"])
+        return True
+
+    def resize(self, new_hdp_scheduler: GlobalScheduler):
+        """Elastic rescale: params/opt are HDP-replicated; only the plan
+        changes.  (On hardware this follows a mesh re-init + ZeRO reshard
+        via the checkpoint restore path.)"""
+        self.sched = new_hdp_scheduler
+        self.rank_times = np.zeros(new_hdp_scheduler.hdp)
+
+    # ------------------------------------------------------------------
+    def train_step(self) -> Dict:
+        plan = self.sched.plan_step(self.step)
+        denom = float(plan.denom)
+        grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             self.params)
+        losses = []
+        t0 = time.time()
+        wave_costs = np.zeros(self.sched.hdp)
+        for lw in self.loader.iter_step(self.step, plan):
+            batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
+            batch["denom"] = jnp.float32(denom)
+            fn = self._wave_fn(lw.composition, lw.c_mult, lw.offload_ratio)
+            grads, metrics = fn(self.params, grads, batch)
+            losses.append(float(metrics["loss"]))
+        self.params, self.opt_state, om = jax.jit(self.apply_step)(
+            self.params, self.opt_state, grads)
+        # straggler feedback: EMA of per-rank modeled times this step
+        for w in plan.waves:
+            wave_costs += np.asarray(w.costs)
+        speed = 1.0 / np.maximum(wave_costs / max(wave_costs.mean(), 1e-9),
+                                 1e-3)
+        if self.sched.rank_speed is None:
+            self.sched.update_rank_speed(speed)
+        else:
+            a = self.tcfg.straggler_ema
+            self.sched.update_rank_speed(a * self.sched.rank_speed
+                                         + (1 - a) * speed)
+        self.step += 1
+        rec = {"step": self.step, "loss": float(np.sum(losses)),
+               "waves": len(plan.waves),
+               "bubble_frac": plan.stats["bubble_frac"],
+               "grad_norm": float(om["grad_norm"]),
+               "wall_s": time.time() - t0}
+        self.history.append(rec)
+        if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+            self.ckpt.save(self.step, self.params, self.opt_state,
+                           {"step": self.step})
+        return rec
+
+    def run(self, steps: Optional[int] = None):
+        n = steps if steps is not None else self.tcfg.steps
+        for _ in range(n):
+            yield self.train_step()
+        if self.ckpt:
+            self.ckpt.save(self.step, self.params, self.opt_state,
+                           {"step": self.step}, block=True)
+            self.ckpt.wait()

@@ -1,0 +1,18 @@
+import os
+
+# Smoke tests see ONE device (the dry-run sets its own 512-device flag in a
+# separate process; distributed tests spawn subprocesses with their own
+# XLA_FLAGS).
+os.environ.setdefault("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.parallel.sharding import single_device_runtime  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rt1():
+    rt = single_device_runtime(remat="none")
+    jax.set_mesh(rt.mesh)
+    return rt

@@ -1,0 +1,52 @@
+"""Eq. 3 selective-offload solver properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core import offload as OF
+
+CFG = get_config("llama-7b")
+COEFFS = OF.analytic_coeffs(CFG)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(1, 4_000_000), cap=st.sampled_from([4096, 8192, 16384]))
+def test_solver_bounds(s, cap):
+    r, d = OF.solve_eq3(COEFFS, s, cap, CFG.num_layers)
+    assert 0.0 <= r <= 1.0
+    assert 1 <= d <= max(1, math.ceil(s / cap))           # never worse than
+    if s <= cap:                                          # naive sharding
+        assert d == 1 and r == 0.0
+
+
+def test_offload_shrinks_ranks_for_long_sequences():
+    _, d_no = OF.solve_eq3(COEFFS, 2_000_000, 8192, CFG.num_layers)
+    d_naive = math.ceil(2_000_000 / 8192)
+    assert d_no < d_naive                                  # paper Fig. 11(a)
+
+
+def test_overlap_constraint_binds_for_linear_compute():
+    """Attention-free (quadratic=False): linear compute can't hide linear
+    transfers as well — the feasible ratio drops (DESIGN.md §5)."""
+    r_quad = OF.max_overlap_ratio(COEFFS, 500_000, OF.OffloadHW())
+    c_lin = OF.CostCoeffs(a1=0.0, b1=COEFFS.b1, g=COEFFS.g,
+                          a2=COEFFS.a2, b2=COEFFS.b2)
+    r_lin = OF.max_overlap_ratio(c_lin, 500_000, OF.OffloadHW())
+    assert r_lin <= r_quad
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.integers(20_000, 3_000_000), d=st.integers(1, 64))
+def test_ratio_for_d_consistency(s, d):
+    """If ratio_for_d returns r, plugging r back into the D formula must
+    need <= d ranks."""
+    cap, ell = 8192, CFG.num_layers
+    r = OF.ratio_for_d(COEFFS, s, cap, ell, d)
+    if r is None:
+        return
+    act_s = OF.act_bytes(COEFFS, s)
+    need = math.ceil((2 * act_s + (1 - r) * (ell - 2) * act_s)
+                     / (ell * OF.act_bytes(COEFFS, cap)))
+    assert need <= max(d, 1) + 1

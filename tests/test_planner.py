@@ -1,0 +1,95 @@
+"""Property tests: packing, Alg. 1, Alg. 2 — invariants over random batches."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core import offload as OF
+from repro.core.balance import balance_plan
+from repro.core.hdp import (CommModel, kv_bytes_per_token, naive_hdp_plan,
+                            static_cp_plan, validate_plan)
+from repro.data.packing import best_fit_decreasing, zigzag_chunks
+
+CFG = get_config("llama-7b")
+COEFFS = OF.analytic_coeffs(CFG)
+COMM = CommModel(kv_bytes_per_token=kv_bytes_per_token(CFG))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=60),
+       st.sampled_from([1024, 4096]))
+def test_packing_conserves_and_respects_capacity(lengths, cap):
+    lengths = [min(l, cap) for l in lengths]
+    bins = best_fit_decreasing(lengths, cap)
+    seen = sorted(sid for b in bins for sid, _ in b)
+    assert seen == list(range(len(lengths)))              # every seq placed once
+    for b in bins:
+        assert sum(ln for _, ln in b) <= cap
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 4096), st.integers(1, 16))
+def test_zigzag_covers_sequence(length, group):
+    group = min(group, length // 2) or 1
+    chunks = zigzag_chunks(length, group)
+    marks = np.zeros(length, np.int32)
+    per_rank = []
+    for _, lo, hi in chunks:
+        marks[lo[0]:lo[1]] += 1
+        marks[hi[0]:hi[1]] += 1
+        per_rank.append((lo[1] - lo[0]) + (hi[1] - hi[0]))
+    assert (marks == 1).all()
+    assert max(per_rank) - min(per_rank) <= 2             # balanced split
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       strategy=st.sampled_from(["naive", "balance-dp", "balance-pp"]))
+def test_plans_are_valid(seed, strategy):
+    rng = np.random.default_rng(seed)
+    lengths = [int(x) for x in
+               np.clip(rng.lognormal(7, 1.5, size=40), 16, 200_000)]
+    kw = dict(capacity=8192, hdp=32, coeffs=COEFFS,
+              num_layers=CFG.num_layers, comm=COMM)
+    if strategy == "naive":
+        plan = naive_hdp_plan(lengths, use_offload=False, **kw)
+    else:
+        plan = balance_plan(lengths, mode=strategy.split("-")[1], **kw)
+    validate_plan(plan, lengths)                          # exact token cover
+    for w in plan.waves:
+        assert sum(w.composition) == 32                   # compositions tile hdp
+
+
+def test_balance_beats_naive_on_skewed_batch():
+    rng = np.random.default_rng(3)
+    lengths = [int(x) for x in
+               np.clip(rng.lognormal(7, 1.6, size=200), 16, 500_000)]
+    kw = dict(capacity=8192, hdp=64, coeffs=COEFFS,
+              num_layers=CFG.num_layers, comm=COMM)
+    naive = naive_hdp_plan(lengths, use_offload=False, **kw)
+    bal = balance_plan(lengths, mode="dp", **kw)
+    assert bal.stats["makespan"] <= naive.stats["makespan"] * 1.01
+    assert bal.stats["bubble_frac"] <= naive.stats["bubble_frac"] + 0.05
+
+
+def test_hdp_beats_static_cp_on_long_context():
+    rng = np.random.default_rng(5)
+    from repro.data.distribution import DISTRIBUTIONS
+    lengths = DISTRIBUTIONS["github"].sample_tokens(rng, 4_000_000, 2_097_152)
+    kw = dict(capacity=8192, hdp=256, coeffs=COEFFS,
+              num_layers=CFG.num_layers, comm=COMM)
+    static = static_cp_plan(lengths, cp_degree=256, **kw)
+    bal = balance_plan(lengths, mode="dp", **kw)
+    assert bal.stats["makespan"] < static.stats["makespan"]
+
+
+def test_straggler_aware_plan_shifts_load():
+    rng = np.random.default_rng(7)
+    lengths = [int(x) for x in np.clip(rng.lognormal(7, 1, 100), 16, 8192)]
+    kw = dict(capacity=8192, hdp=8, coeffs=COEFFS,
+              num_layers=CFG.num_layers)
+    speed = np.ones(8)
+    speed[0] = 0.1                                        # rank 0 is 10x slower
+    plan = balance_plan(lengths, mode="dp", rank_speed=speed, **kw)
+    per_rank = np.array(plan.stats["per_rank_times"])
+    assert per_rank[0] <= np.median(per_rank)             # slow rank gets less

@@ -1,0 +1,41 @@
+"""Profiler: coefficient fits recover known cost models; real-forward
+profiling produces monotone, usable coefficients."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.offload import layer_time
+from repro.core.profiler import fit_time_coeffs, measure_bandwidths, \
+    profile_model
+
+
+def test_fit_recovers_synthetic_quadratic():
+    a1, b1, g = 3e-10, 2e-6, 1e-4
+    lengths = [1024, 2048, 4096, 8192, 16384, 65536]
+    secs = [a1 * s * s + b1 * s + g for s in lengths]
+    c = fit_time_coeffs(lengths, secs, act_per_token=1000.0)
+    assert np.isclose(c.a1, a1, rtol=1e-3)
+    assert np.isclose(c.b1, b1, rtol=1e-2)
+    for s in (3000, 100_000):
+        assert np.isclose(layer_time(c, s), a1 * s * s + b1 * s + g,
+                          rtol=1e-3)
+
+
+def test_fit_linear_for_attention_free():
+    lengths = [512, 1024, 4096]
+    secs = [2e-6 * s + 1e-4 for s in lengths]
+    c = fit_time_coeffs(lengths, secs, act_per_token=10.0, quadratic=False)
+    assert c.a1 == 0.0
+    assert np.isclose(c.b1, 2e-6, rtol=1e-2)
+
+
+def test_profile_model_smoke(rt1):
+    cfg = get_config("llama3.2-3b").reduced()
+    c = profile_model(cfg, rt1, [64, 128, 256], iters=1)
+    assert c.b1 >= 0 and c.a2 > 0
+    assert layer_time(c, 256) >= layer_time(c, 64) * 0.5
+
+
+def test_measure_bandwidths():
+    d2h, h2d = measure_bandwidths(1 << 20)
+    assert d2h > 1e6 and h2d > 1e6          # >1MB/s, sanity only

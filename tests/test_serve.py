@@ -1,0 +1,77 @@
+"""Decode-vs-forward consistency: autoregressive decode through the cache
+must reproduce the packed-forward logits position by position."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.transformer import forward_hidden, init_params, logits_head
+from repro.train.serve_step import init_decode_cache, make_decode_step
+
+ARCHS = ["llama3.2-3b", "gemma2-9b", "rwkv6-7b", "jamba-1.5-large-398b",
+         "deepseek-v2-lite-16b", "qwen3-moe-30b-a3b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, rt1):
+    import dataclasses as dc
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # capacity dropping is a train-time batch effect; the decode path
+        # never drops — compare the no-drop regime
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(jax.random.PRNGKey(0), cfg, rt1)
+    t, b = 24, 2
+    rng = np.random.RandomState(0)
+    tokens = rng.randint(0, cfg.vocab_size, (b, t))
+
+    # packed forward: the two sequences as segments 1 and 2
+    flat = jnp.array(tokens.reshape(-1))
+    seg = jnp.array(np.repeat([1, 2], t))
+    pos = jnp.array(np.tile(np.arange(t), b))
+    batch = {"tokens": flat, "seg": seg,
+             "pos": jnp.stack([pos] * 3, -1) if cfg.pos_embed == "mrope"
+             else pos}
+    h = forward_hidden(params, cfg, rt1, batch)
+    ref_logits = logits_head(params, cfg, h).reshape(b, t, -1)
+
+    # teacher-forced decode through the cache
+    cache = init_decode_cache(cfg, rt1, b, t)
+    step = make_decode_step(cfg, rt1, b, t)
+    outs = []
+    for i in range(t):
+        lg, cache = step(params, cache, jnp.array(tokens[:, i]),
+                         jnp.int32(i))
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(ref_logits, np.float32), atol=0.08, rtol=0.08)
+
+
+def test_sliding_window_ring_buffer(rt1):
+    """Gemma-2 local layers keep window-sized ring caches; decode beyond the
+    window must still match the windowed forward."""
+    cfg = get_config("gemma2-9b").reduced()   # window=16
+    params = init_params(jax.random.PRNGKey(1), cfg, rt1)
+    t, b = 40, 1                               # > window
+    rng = np.random.RandomState(1)
+    tokens = rng.randint(0, cfg.vocab_size, (b, t))
+    flat = jnp.array(tokens.reshape(-1))
+    seg = jnp.ones(t, jnp.int32)
+    pos = jnp.arange(t)
+    h = forward_hidden(params, cfg, rt1,
+                       {"tokens": flat, "seg": seg, "pos": pos})
+    ref_logits = logits_head(params, cfg, h).reshape(b, t, -1)
+    cache = init_decode_cache(cfg, rt1, b, t)
+    step = make_decode_step(cfg, rt1, b, t)
+    outs = []
+    for i in range(t):
+        lg, cache = step(params, cache, jnp.array(tokens[:, i]), jnp.int32(i))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               atol=0.08, rtol=0.08)

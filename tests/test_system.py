@@ -1,0 +1,68 @@
+"""End-to-end system behaviour: trainer loop + checkpoint/restart + elastic
+resize + straggler feedback."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.distribution import LengthDistribution
+from repro.data.loader import GlobalScheduler, SyntheticDataset
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+DIST = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+
+
+def _mk(cfg, rt, tdir, hdp=1, strategy="balance"):
+    ds = SyntheticDataset(DIST, cfg.vocab_size, tokens_per_step=4096,
+                          context=2048)
+    sched = GlobalScheduler(ds, cfg, capacity=512, hdp=hdp,
+                            strategy=strategy, use_offload=False)
+    return Trainer(cfg, rt, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                        total_steps=50),
+                   sched, TrainerConfig(capacity=512, ckpt_every=2,
+                                        ckpt_dir=tdir))
+
+
+def test_train_converges_and_restarts(rt1, tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    tr = _mk(cfg, rt1, str(tmp_path))
+    for _ in tr.run(4):
+        pass
+    first = tr.history[0]["loss"]
+    # crash + resume
+    tr2 = _mk(cfg, rt1, str(tmp_path))
+    assert tr2.resume_if_possible()
+    assert tr2.step == 4
+    for _ in tr2.run(3):
+        pass
+    assert tr2.history[-1]["loss"] < first
+
+
+def test_elastic_resize(rt1, tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    tr = _mk(cfg, rt1, str(tmp_path))
+    for _ in tr.run(1):
+        pass
+    ds = tr.sched.ds
+    new_sched = GlobalScheduler(ds, cfg, capacity=512, hdp=1,
+                                strategy="balance", use_offload=False)
+    tr.resize(new_sched)
+    for rec in tr.run(1):
+        assert np.isfinite(rec["loss"])
+
+
+def test_straggler_feedback_updates(rt1, tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    tr = _mk(cfg, rt1, str(tmp_path))
+    assert tr.sched.rank_speed is None
+    for _ in tr.run(2):
+        pass
+    assert tr.sched.rank_speed is not None
+
+
+def test_strategies_all_run(rt1, tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    for strategy in ("static", "naive", "balance"):
+        tr = _mk(cfg, rt1, str(tmp_path) + strategy, strategy=strategy)
+        for rec in tr.run(1):
+            assert np.isfinite(rec["loss"])
