@@ -4,17 +4,13 @@ is the same one the Balance Scheduler plans with, with hardware constants
 for either the paper's A100/IB cluster or the TPU v5e target)."""
 from __future__ import annotations
 
-import math
 import time
-from dataclasses import dataclass
 
 import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import offload as OF
-from repro.core.balance import balance_plan
-from repro.core.hdp import CommModel, kv_bytes_per_token, naive_hdp_plan, \
-    static_cp_plan
+from repro.core.planner import PlanSpec, plan as plan_batch
 from repro.data.distribution import DISTRIBUTIONS
 
 # hardware presets
@@ -29,31 +25,22 @@ def simulate(model: str, dataset: str, context: int, *, hdp: int = 256,
              hwset=PAPER_HW, strategies=("static", "naive", "balance"),
              use_offload: bool = True):
     cfg = get_config(model)
-    coeffs = OF.analytic_coeffs(cfg, hwset["hw"], mfu=hwset["mfu"])
-    comm = CommModel(kv_bytes_per_token=kv_bytes_per_token(cfg),
-                     ici_bw=hwset["ici_bw"])
+    base = PlanSpec.for_config(cfg, capacity=capacity, hdp=hdp,
+                               hw=hwset["hw"], mfu=hwset["mfu"],
+                               ici_bw=hwset["ici_bw"])
     rng = np.random.default_rng(seed)
     lens = DISTRIBUTIONS[dataset].sample_tokens(rng, tokens, context)
-    cp = min(hdp, 2 ** math.ceil(
-        math.log2(max(1, -(-max(lens) // capacity)))))
-    kw = dict(capacity=capacity, hdp=hdp, coeffs=coeffs,
-              num_layers=cfg.num_layers, comm=comm)
-    out = {}
-    for s in strategies:
-        if s == "static":
-            plan = static_cp_plan(lens, cp_degree=cp, **kw)
-        elif s == "naive":
-            plan = naive_hdp_plan(lens, use_offload=False, **kw)
-        elif s == "naive+offload":
-            # deployed behaviour: Eq.3 sets the D floor; the scheduler keeps
-            # per-rank compute near batch average (DESIGN.md §2)
-            plan = naive_hdp_plan(lens, use_offload=True, balance_d=True,
-                                  **kw)
-        else:
-            plan = balance_plan(lens, mode="dp", use_offload=use_offload,
-                                **kw)
-        out[s] = plan
-    return lens, out
+    specs = {
+        "static": base.replace(strategy="static"),
+        "naive": base.replace(strategy="naive", use_offload=False),
+        # deployed behaviour: Eq.3 sets the D floor; the scheduler keeps
+        # per-rank compute near batch average (DESIGN.md §2)
+        "naive+offload": base.replace(strategy="naive", use_offload=True,
+                                      balance_d=True),
+        "balance": base.replace(strategy="balance", mode="dp",
+                                use_offload=use_offload),
+    }
+    return lens, {s: plan_batch(lens, specs[s]) for s in strategies}
 
 
 def timeit(fn, *args, iters=3, warmup=1):

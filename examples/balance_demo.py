@@ -7,9 +7,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import offload as OF
-from repro.core.balance import balance_plan
-from repro.core.hdp import CommModel, kv_bytes_per_token, naive_hdp_plan, \
-    static_cp_plan
+from repro.core.planner import PlanSpec, plan as plan_batch
 from repro.data.distribution import DISTRIBUTIONS
 
 
@@ -20,18 +18,19 @@ def bar(frac, width=40):
 def main():
     cfg = get_config("llama-7b")
     hw = OF.OffloadHW(d2h_bw=12e9, h2d_bw=12e9, peak_flops=300e12)
-    coeffs = OF.analytic_coeffs(cfg, hw)
-    comm = CommModel(kv_bytes_per_token=kv_bytes_per_token(cfg), ici_bw=25e9)
+    base = PlanSpec.for_config(cfg, capacity=8192, hdp=64, hw=hw,
+                               ici_bw=25e9)
     rng = np.random.default_rng(7)
     lens = DISTRIBUTIONS["byted"].sample_tokens(rng, 8_000_000, 2_097_152)
     print(f"global batch: {len(lens)} sequences, {sum(lens)/1e6:.1f}M tokens,"
           f" max {max(lens)/1024:.0f}K")
-    kw = dict(capacity=8192, hdp=64, coeffs=coeffs,
-              num_layers=cfg.num_layers, comm=comm)
     plans = {
-        "static-CP": static_cp_plan(lens, cp_degree=64, **kw),
-        "naive-HDP": naive_hdp_plan(lens, use_offload=False, **kw),
-        "balanced-HDP": balance_plan(lens, mode="dp", **kw),
+        "static-CP": plan_batch(lens, base.replace(strategy="static",
+                                                   cp_degree=64)),
+        "naive-HDP": plan_batch(lens, base.replace(strategy="naive",
+                                                   use_offload=False)),
+        "balanced-HDP": plan_batch(lens, base.replace(strategy="balance",
+                                                      mode="dp")),
     }
     base = plans["static-CP"].stats["makespan"]
     for name, plan in plans.items():

@@ -4,8 +4,7 @@
 """
 import argparse
 
-import jax
-
+from repro import compat
 from repro.configs.registry import get_config
 from repro.data.distribution import LengthDistribution
 from repro.data.loader import GlobalScheduler, SyntheticDataset
@@ -22,7 +21,7 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     rt = single_device_runtime(remat="none")
-    jax.set_mesh(rt.mesh)
+    compat.set_mesh(rt.mesh)
     print(f"arch={cfg.name}  d_model={cfg.d_model}  layers={cfg.num_layers}  "
           f"pattern={cfg.layer_pattern}")
 

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.registry import get_config
 from repro.models.transformer import init_params
 from repro.parallel.sharding import single_device_runtime
@@ -24,7 +25,7 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     rt = single_device_runtime(remat="none")
-    jax.set_mesh(rt.mesh)
+    compat.set_mesh(rt.mesh)
     params = init_params(jax.random.PRNGKey(0), cfg, rt)
     b, horizon = args.batch, args.tokens
     cache = init_decode_cache(cfg, rt, b, horizon)

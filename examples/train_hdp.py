@@ -7,8 +7,7 @@ scheduler + waves + checkpoints).
 import argparse
 import dataclasses as dc
 
-import jax
-
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.data.distribution import LengthDistribution
 from repro.data.loader import GlobalScheduler, SyntheticDataset
@@ -32,7 +31,7 @@ def main():
     args = ap.parse_args()
 
     rt = single_device_runtime(remat="none")
-    jax.set_mesh(rt.mesh)
+    compat.set_mesh(rt.mesh)
     dist = LengthDistribution("mix", 5.5, 1.0, 0.05, 1.3, 2048)
     ds = SyntheticDataset(dist, CFG_100M.vocab_size, args.tokens_per_step,
                           context=8192)

@@ -1,0 +1,119 @@
+"""Unified planner API: ByteScale Alg. 1, Alg. 2 and the static-CP baseline
+behind one validated entry point.
+
+Every consumer (Trainer via GlobalScheduler, the dry-run, benchmarks,
+examples) obtains plans through ``plan(lengths, spec)``; the three
+underlying constructors (`naive_hdp_plan`, `balance_plan`, `static_cp_plan`)
+are implementation details of `core/`.  A `PlanSpec` bundles everything the
+planners need — strategy, capacity/HDP geometry, the Eq. 3 cost
+coefficients, the ring-traffic comm model, offload and straggler knobs —
+and `PlanSpec.for_config` derives the model-dependent parts from a
+ModelConfig, which is what the loader/trainer/benchmarks used to duplicate
+by hand.
+
+`plan()` ALWAYS runs `validate_plan` (exact token cover + per-rank capacity)
+before returning: a plan that reaches an executor is a checked plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import offload as OF
+from repro.core.balance import balance_plan
+from repro.core.hdp import (CommModel, StepPlan, kv_bytes_per_token,
+                            naive_hdp_plan, static_cp_plan, validate_plan)
+
+STRATEGIES = ("balance", "naive", "static")
+
+
+@dataclass(frozen=True)
+class PlanSpec:
+    """Everything `plan()` needs beyond the batch's lengths.
+
+    strategy  "balance" (Alg. 2) | "naive" (Alg. 1) | "static" (CP baseline)
+    mode      balance sub-mode: "dp" (DP-Balance) | "pp" (PP-Balance)
+    coeffs    Eq. 3 per-layer cost model T(s)/Act(s)
+    comm      ring dist-attention traffic model (None = compute-only)
+    rank_speed  [hdp] relative throughput (straggler mitigation), or None
+    cp_degree   static strategy: fixed CP width (None = pow2 of longest seq)
+    balance_d   naive strategy: Eq. 3 D floor with balanced group sizing
+    """
+    capacity: int
+    hdp: int
+    coeffs: OF.CostCoeffs
+    num_layers: int
+    strategy: str = "balance"
+    mode: str = "dp"
+    use_offload: bool = True
+    balance_d: bool = False
+    quadratic: bool = True
+    zigzag: bool = True
+    comm: Optional[CommModel] = None
+    rank_speed: Optional[np.ndarray] = None
+    cp_degree: Optional[int] = None
+    n_buckets: int = 8
+    delta: Optional[float] = None
+
+    @classmethod
+    def for_config(cls, cfg, *, capacity: int, hdp: int,
+                   hw: Optional[OF.OffloadHW] = None, mfu: float = 0.5,
+                   ici_bw: Optional[float] = None, **overrides) -> "PlanSpec":
+        """Derive the model-dependent fields (cost coefficients, ring
+        payload, attention-free quadratic/zigzag switches) from a
+        ModelConfig + hardware preset."""
+        coeffs = OF.analytic_coeffs(cfg, hw or OF.OffloadHW(), mfu=mfu)
+        comm_kw = dict(kv_bytes_per_token=kv_bytes_per_token(cfg))
+        if ici_bw is not None:
+            comm_kw["ici_bw"] = ici_bw
+        kw = dict(capacity=capacity, hdp=hdp, coeffs=coeffs,
+                  num_layers=cfg.num_layers, comm=CommModel(**comm_kw),
+                  quadratic=not cfg.attention_free,
+                  zigzag=not cfg.attention_free)
+        kw.update(overrides)        # explicit overrides win over derived
+        return cls(**kw)
+
+    def replace(self, **kw) -> "PlanSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def auto_cp_degree(lengths: Sequence[int], capacity: int, hdp: int) -> int:
+    """The baseline's CP width: next power of two covering the longest
+    sequence at `capacity` tokens/rank, capped at the HDP size."""
+    longest = max(lengths, default=0)
+    return min(hdp, 2 ** math.ceil(
+        math.log2(max(1, -(-longest // capacity)))))
+
+
+def plan(lengths: Sequence[int], spec: PlanSpec) -> StepPlan:
+    """Plan one global batch.  Dispatches on ``spec.strategy``, stamps the
+    strategy into ``plan.stats`` and always validates before returning."""
+    lengths = [int(ln) for ln in lengths]
+    kw = dict(capacity=spec.capacity, hdp=spec.hdp, coeffs=spec.coeffs,
+              num_layers=spec.num_layers, comm=spec.comm,
+              quadratic=spec.quadratic, zigzag=spec.zigzag)
+    if spec.strategy == "static":
+        cp = spec.cp_degree or auto_cp_degree(lengths, spec.capacity,
+                                              spec.hdp)
+        p = static_cp_plan(lengths, cp_degree=cp, **kw)
+        p.stats["cp_degree"] = cp
+    elif spec.strategy == "naive":
+        p = naive_hdp_plan(lengths, use_offload=spec.use_offload,
+                           balance_d=spec.balance_d, **kw)
+    elif spec.strategy == "balance":
+        speed = None if spec.rank_speed is None \
+            else np.asarray(spec.rank_speed, dtype=float)
+        p = balance_plan(lengths, mode=spec.mode,
+                         use_offload=spec.use_offload, rank_speed=speed,
+                         n_buckets=spec.n_buckets, delta=spec.delta, **kw)
+    else:
+        raise ValueError(
+            f"unknown strategy {spec.strategy!r}; expected one of "
+            f"{STRATEGIES}")
+    p.stats["strategy"] = spec.strategy
+    validate_plan(p, lengths)
+    return p

@@ -19,6 +19,9 @@ KV block provably cannot attend to any local query (wrong segments, entirely
 in the future, or beyond the sliding window) skips its O(C²) block compute.
 This is a beyond-paper optimization enabled by carrying metadata with the
 ring (see EXPERIMENTS.md §Perf).
+
+All shard_map entry points go through `repro.compat` (not `jax.shard_map`
+directly), so the rings run unchanged on jax 0.4.x and ≥0.5.
 """
 from __future__ import annotations
 
@@ -27,9 +30,9 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import attention as att
 
 AxisNames = Tuple[str, ...]

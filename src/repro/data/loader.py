@@ -25,10 +25,8 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import offload as OF
-from repro.core.balance import balance_plan
-from repro.core.hdp import CommModel, StepPlan, Wave, kv_bytes_per_token, \
-    naive_hdp_plan, static_cp_plan
+from repro.core.hdp import StepPlan, Wave
+from repro.core.planner import PlanSpec, plan as plan_batch
 from repro.data.distribution import DISTRIBUTIONS, LengthDistribution
 
 
@@ -68,7 +66,9 @@ class LoadedWave:
 
 
 class GlobalScheduler:
-    """The single controller: metadata in, (plan, buffers) out."""
+    """The single controller: metadata in, (plan, buffers) out.  All plan
+    construction goes through `repro.core.planner.plan` — this class only
+    owns the PlanSpec and the live straggler weights."""
 
     def __init__(self, dataset: SyntheticDataset, cfg: ModelConfig, *,
                  capacity: int, hdp: int, mode: str = "dp",
@@ -76,33 +76,27 @@ class GlobalScheduler:
                  rank_speed: Optional[np.ndarray] = None):
         self.ds = dataset
         self.cfg = cfg
-        self.capacity = capacity
-        self.hdp = hdp
-        self.mode = mode
-        self.strategy = strategy
-        self.use_offload = use_offload
-        self.coeffs = OF.analytic_coeffs(cfg)
-        self.comm = CommModel(kv_bytes_per_token=kv_bytes_per_token(cfg))
+        self.spec = PlanSpec.for_config(
+            cfg, capacity=capacity, hdp=hdp, strategy=strategy, mode=mode,
+            use_offload=use_offload)
         self.rank_speed = rank_speed            # straggler mitigation weights
-        self.quadratic = not cfg.attention_free
-        self.zigzag = not cfg.attention_free    # SSM archs use contiguous
+
+    @property
+    def capacity(self) -> int:
+        return self.spec.capacity
+
+    @property
+    def hdp(self) -> int:
+        return self.spec.hdp
+
+    @property
+    def strategy(self) -> str:
+        return self.spec.strategy
 
     def plan_step(self, step: int) -> StepPlan:
         lengths = self.ds.step_lengths(step)
-        kw = dict(capacity=self.capacity, hdp=self.hdp, coeffs=self.coeffs,
-                  num_layers=self.cfg.num_layers, comm=self.comm,
-                  quadratic=self.quadratic, zigzag=self.zigzag)
-        if self.strategy == "static":
-            import math
-            cp = min(self.hdp, 2 ** math.ceil(
-                math.log2(max(1, -(-max(lengths) // self.capacity)))))
-            plan = static_cp_plan(lengths, cp_degree=cp, **kw)
-        elif self.strategy == "naive":
-            plan = naive_hdp_plan(lengths, use_offload=self.use_offload, **kw)
-        else:
-            plan = balance_plan(lengths, mode=self.mode,
-                                use_offload=self.use_offload,
-                                rank_speed=self.rank_speed, **kw)
+        plan = plan_batch(lengths,
+                          self.spec.replace(rank_speed=self.rank_speed))
         plan.stats["lengths"] = len(lengths)
         return plan
 

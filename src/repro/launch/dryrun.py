@@ -28,8 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import SHAPES, ModelConfig
 from repro.configs.registry import dryrun_cells, get_config
+from repro.core import planner as PL
 from repro.launch.mesh import hdp_axes_of, make_production_mesh, mesh_chips
 from repro.launch import roofline as RL
 from repro.parallel.sharding import Runtime
@@ -43,17 +45,32 @@ DEFAULT_CAPACITY = 8192          # tokens per HDP rank per wave (paper §3.2)
 
 def wave_plan(cfg: ModelConfig, shape_name: str, rt: Runtime,
               capacity: int = DEFAULT_CAPACITY):
-    """(composition, tokens_per_wave, n_waves) for train/prefill shapes."""
+    """(composition, tokens_per_wave, n_waves) for train/prefill shapes.
+
+    The dry-run lowers the homogeneous steady-state wave: one wave-filling
+    batch of the shape's sequence length, planned through the unified
+    planner at a fixed CP width (mixed leftover groups would come from the
+    balance scheduler)."""
     shape = SHAPES[shape_name]
     hdp = rt.hdp_size
     seq = shape.seq_len
     g = max(1, -(-seq // capacity))                 # ranks per sequence
-    # mixed leftover groups would come from the balance scheduler; the
-    # dry-run lowers the homogeneous steady-state wave
-    while hdp % g != 0:
+    while g < hdp and hdp % g != 0:
         g += 1
-    comp = (g,) * (hdp // g)
-    tokens_per_wave = capacity * hdp
+    # a sequence needing more ranks than the axis has spans the whole axis
+    # with a bigger per-rank buffer (c_mult > 1) instead of hanging
+    g = min(g, hdp)
+    per_rank = -(-seq // g)
+    c_mult = max(1, -(-per_rank // capacity))
+    tokens_per_wave = capacity * c_mult * hdp
+    lengths = [seq] * max(1, tokens_per_wave // seq)
+    spec = PL.PlanSpec.for_config(cfg, capacity=capacity, hdp=hdp,
+                                  strategy="static", cp_degree=g,
+                                  use_offload=False)
+    plan = PL.plan(lengths, spec)
+    comp = plan.waves[0].composition
+    assert sum(comp) == hdp, (comp, hdp)
+    assert plan.waves[0].c_mult == c_mult, (plan.waves[0].c_mult, c_mult)
     total_tokens = shape.seq_len * shape.global_batch
     n_waves = max(1, total_tokens // tokens_per_wave)
     return comp, tokens_per_wave, n_waves
@@ -97,7 +114,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = cfg_override or get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     rt = Runtime(mesh=mesh, hdp_axes=hdp_axes_of(mesh), model_axis="model",
                  remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl,
                  # cost lowering: unroll ring steps + period loop + use
@@ -134,7 +151,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
             bspecs = batch_pspecs(cfg, rt, batch)
             bspecs["last_idx"] = P()
             step = make_prefill_step(cfg, rt)
-            lowered = jax.jit(step, in_shardings=(pspecs, bspecs)).lower(
+            lowered = jax.jit(
+                step,
+                in_shardings=compat.resolve_shardings((pspecs, bspecs),
+                                                      mesh)).lower(
                 params_like, batch)
             tokens = t_wave
             fsdp = False
@@ -163,7 +183,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         tok_spec = P(batch_axes if batch_axes else None)
         lowered = jax.jit(
             step,
-            in_shardings=(pspecs, cspecs, tok_spec, P()),
+            in_shardings=compat.resolve_shardings(
+                (pspecs, cspecs, tok_spec, P()), mesh),
             donate_argnums=() if cost_mode else (1,),
         ).lower(params_like, cache, tok,
                 jax.ShapeDtypeStruct((), jnp.int32))

@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
+from repro import compat
 from repro.configs.registry import get_config
 from repro.data.distribution import DISTRIBUTIONS, LengthDistribution
 from repro.data.loader import GlobalScheduler, SyntheticDataset
@@ -52,7 +51,7 @@ def main():
         mesh = make_production_mesh(multi_pod=len(dims) == 3)
         rt = Runtime(mesh=mesh, hdp_axes=hdp_axes_of(mesh),
                      model_axis="model")
-    jax.set_mesh(rt.mesh)
+    compat.set_mesh(rt.mesh)
 
     dist = DISTRIBUTIONS.get(args.dataset) or \
         LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)

@@ -22,6 +22,10 @@ Under HDP, a sequence sharded over a rank group composes the per-rank
 ``core.ring.distributed_state_scan`` — see DESIGN.md §5 (the paper's
 ring-attention does not apply to attention-free mixers; token-balanced
 scheduling still does).
+
+The per-rank sweep is pure jnp: `models/transformer.py` wraps it in the
+version-portable `repro.compat.shard_map` (not `jax.shard_map`), so this
+module needs no JAX-version gating of its own.
 """
 from __future__ import annotations
 

@@ -20,10 +20,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import offload_policy, shard_map
 from repro.configs.base import ModelConfig
 from repro.core import ring as R
 from repro.models import layers as L
@@ -319,9 +319,10 @@ def embed_tokens(params, cfg: ModelConfig, tokens):
 
 
 def _offload_policy():
-    return jax.checkpoint_policies.save_and_offload_only_these_names(
-        names_which_can_be_saved=[], names_which_can_be_offloaded=["resid"],
-        offload_src="device", offload_dst="pinned_host")
+    # compat probes for a host memory space; backends without pinned_host
+    # fall back to saving the same names on device (no transfer, same
+    # recompute structure)
+    return offload_policy(names=("resid",))
 
 
 def _split_stacked(blocks, k: int):

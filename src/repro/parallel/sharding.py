@@ -18,6 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.layers import gqa_layout
 
@@ -55,8 +56,8 @@ class Runtime:
 
 def single_device_runtime(**kw) -> Runtime:
     """CPU smoke-test runtime: a 1×1 mesh."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     return Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
                    composition=(1,), **kw)
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import resolve_shardings
 from repro.configs.base import ModelConfig
 from repro.core.loss import token_ce_loss
 from repro.models.transformer import forward_hidden, init_params
@@ -103,8 +104,10 @@ def jitted_train_step(cfg: ModelConfig, rt: Runtime,
     bspecs = batch_pspecs(cfg, rt, batch_like)
 
     step = make_train_step(cfg, rt, opt_cfg)
+    # resolve_shardings: bare PartitionSpecs in jit shardings only work on
+    # jax >= 0.5 under set_mesh; NamedSharding works on every version
     return jax.jit(
         step,
-        in_shardings=(pspecs, ospecs, bspecs),
-        out_shardings=(pspecs, ospecs, None),
+        in_shardings=resolve_shardings((pspecs, ospecs, bspecs), rt.mesh),
+        out_shardings=resolve_shardings((pspecs, ospecs, None), rt.mesh),
         donate_argnums=(0, 1) if donate else ())

@@ -1,10 +1,13 @@
 """The training loop: HDP waves + gradient accumulation + fault tolerance.
 
-Per step (paper Fig. 7): the GlobalScheduler plans the global batch into
-waves (Alg. 1/2); each wave dispatches through a per-(composition, c_mult,
-offload) jitted executable (the compile cache is ByteScale's NCCL-group
-cache analogue); gradients accumulate with token-level loss scaling and the
-optimizer applies once (Eq. 2 — bit-equivalent to plain DP).
+Per step (paper Fig. 7): the GlobalScheduler plans the global batch through
+the unified planner API (`repro.core.planner.plan` — Alg. 1/2 behind one
+validated entry point); each wave dispatches through a per-(composition,
+c_mult, offload) jitted executable (the compile cache is ByteScale's
+NCCL-group cache analogue); gradients accumulate with token-level loss
+scaling and the optimizer applies once (Eq. 2 — bit-equivalent to plain
+DP).  Version-sensitive JAX surfaces (shard_map, meshes, host offload) are
+reached via `repro.compat`, so the loop runs on jax 0.4.x and ≥0.5.
 
 Fault tolerance: periodic async checkpoints (atomic + hash-verified) with
 auto-resume; ``resize()`` re-plans for a different HDP size (parameters are
@@ -21,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
@@ -39,7 +43,9 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     mode: str = "dp"                 # balance mode
     strategy: str = "balance"        # static | naive | balance
-    use_offload: bool = False        # offload remat needs pinned_host support
+    use_offload: bool = False        # offload remat (auto-disabled when the
+                                     # backend lacks a host memory space —
+                                     # compat.offload_supported())
     straggler_ema: float = 0.5
 
 
@@ -54,6 +60,8 @@ class Trainer:
         self.tcfg = tcfg
         assert scheduler.hdp == rt.hdp_size, \
             (scheduler.hdp, rt.hdp_size, "plan world must match mesh")
+        self.offload_ok = tcfg.use_offload and compat.offload_supported()
+        self._align_offload(scheduler)
         self.loader = WaveMaterializer(scheduler.ds, cfg, tcfg.capacity)
         self.params = init_params(jax.random.PRNGKey(seed), cfg, rt)
         self.opt_state = adamw.init_state(self.params)
@@ -65,11 +73,18 @@ class Trainer:
         self.history: list = []
 
     # ------------------------------------------------------------------
+    def _align_offload(self, scheduler: GlobalScheduler):
+        """Keep plan and execution consistent: when waves cannot offload
+        (no host memory space, or disabled in the TrainerConfig), the
+        scheduler must not size groups with Eq. 3's offload term either."""
+        if scheduler.spec.use_offload and not self.offload_ok:
+            scheduler.spec = scheduler.spec.replace(use_offload=False)
+
     def _wave_fn(self, composition, c_mult, offload_ratio):
         key = (composition, c_mult, round(offload_ratio, 2))
         if key not in self._exec_cache:
             rt_wave = self.rt.with_composition(composition)
-            if self.tcfg.use_offload and offload_ratio > 0:
+            if self.offload_ok and offload_ratio > 0:
                 import dataclasses as dc
                 rt_wave = dc.replace(
                     rt_wave, remat="offload",
@@ -94,6 +109,7 @@ class Trainer:
         changes.  (On hardware this follows a mesh re-init + ZeRO reshard
         via the checkpoint restore path.)"""
         self.sched = new_hdp_scheduler
+        self._align_offload(new_hdp_scheduler)
         self.rank_times = np.zeros(new_hdp_scheduler.hdp)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,163 @@
+"""Deterministic micro-fallback for `hypothesis`.
+
+The property tests in this repo use a small slice of the hypothesis API
+(`given`, `settings`, `assume`, and the integers / sampled_from / lists /
+floats / booleans / tuples / just strategies).  When the real package is
+installed, conftest leaves it alone and this module is unused.  When it is
+missing (the hermetic CI container pins only jax + pytest), conftest calls
+``install()``, which registers this module under ``sys.modules["hypothesis"]``
+so the existing ``from hypothesis import given, settings, strategies as st``
+imports keep working.
+
+Differences from real hypothesis, by design:
+  * examples are drawn from a per-test RNG seeded by crc32(test name) —
+    fully deterministic across runs, no example database, no shrinking;
+  * ``max_examples`` is honored, ``deadline``/health checks are ignored;
+  * failures report the drawn arguments via the assertion traceback only.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied(f"filter predicate never satisfied: {pred}")
+        return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements._draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda rng: strategies[rng.randrange(len(strategies))]._draw(rng))
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example, keep the test going."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        # works above or below @given: functools.wraps copies __dict__,
+        # and the runner reads the attribute off itself at call time
+        fn._propshim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Hypothesis-compatible: positional strategies fill the test's
+    RIGHTMOST parameters; anything left of them (pytest fixtures) stays in
+    the visible signature for pytest to inject."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        pos_names = [p.name for p in params[len(params) - len(arg_strategies):]] \
+            if arg_strategies else []
+        covered = set(pos_names) | set(kw_strategies)
+        remaining = [p for p in params if p.name not in covered]
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_propshim_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            key = f"{fn.__module__}.{fn.__qualname__}".encode()
+            rng = random.Random(zlib.crc32(key))
+            executed = 0
+            for _ in range(n):
+                try:
+                    drawn = {name: s._draw(rng)
+                             for name, s in zip(pos_names, arg_strategies)}
+                    drawn.update({k: s._draw(rng)
+                                  for k, s in kw_strategies.items()})
+                    fn(*args, **kwargs, **drawn)
+                    executed += 1
+                except _Unsatisfied:
+                    continue
+            if executed == 0:
+                # mirror real hypothesis: a test whose every example is
+                # filtered/assumed away must not pass vacuously
+                raise AssertionError(
+                    f"{fn.__qualname__}: all {n} examples were rejected by "
+                    f"assume()/filter(); the test body never ran")
+
+        runner.__signature__ = sig.replace(parameters=remaining)
+        runner.is_hypothesis_test = True
+        return runner
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
+    if "hypothesis" in sys.modules:
+        return
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "floats", "booleans", "lists",
+                 "tuples", "just", "one_of"):
+        setattr(st_mod, name, globals()[name])
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.strategies = st_mod
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None)
+    mod.__propshim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

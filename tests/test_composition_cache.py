@@ -1,0 +1,43 @@
+"""Composition-cache regression guard.
+
+Each distinct (composition, c_mult) a plan emits is one jitted executable in
+the Trainer's cache — the XLA analogue of ByteScale's NCCL-group cache.  A
+scheduler change that starts emitting many near-duplicate compositions
+would silently turn every step into a recompile; this pins the key-set
+growth over a long synthetic run to a small fixed bound."""
+from repro.configs.registry import get_config
+from repro.data.distribution import LengthDistribution
+from repro.data.loader import GlobalScheduler, SyntheticDataset
+
+DIST = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+STEPS = 100
+# measured today: hdp=4 -> 7 keys, hdp=8 -> 10 keys over 100 steps; the
+# bound leaves headroom without letting a quadratic blowup through
+BOUND = {4: 12, 8: 18}
+
+
+def _distinct_keys(hdp: int, strategy: str = "balance") -> set:
+    cfg = get_config("llama3.2-3b").reduced()
+    ds = SyntheticDataset(DIST, cfg.vocab_size, tokens_per_step=4096,
+                          context=2048)
+    sched = GlobalScheduler(ds, cfg, capacity=512, hdp=hdp,
+                            strategy=strategy, use_offload=False)
+    keys = set()
+    for step in range(STEPS):
+        p = sched.plan_step(step)
+        keys |= {(w.composition, w.c_mult) for w in p.waves}
+    return keys
+
+
+def test_composition_cache_stays_bounded():
+    for hdp, bound in BOUND.items():
+        keys = _distinct_keys(hdp)
+        assert len(keys) <= bound, (hdp, len(keys), sorted(keys))
+
+
+def test_static_strategy_keys_bounded():
+    # the baseline's CP width is a power of two sized per step's longest
+    # sequence: compositions stay within the pow2 family (+ padded
+    # leftovers), a strictly smaller key set than the balance scheduler's
+    keys = _distinct_keys(4, strategy="static")
+    assert len(keys) <= 8, sorted(keys)

@@ -9,12 +9,13 @@ RING_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.core.ring import ring_attention
 from repro.core.attention import attention_dense_oracle
 
-mesh = jax.make_mesh((4,2), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
-jax.set_mesh(mesh)
+mesh = compat.make_mesh((4,2), ("data","model"),
+                        axis_types=compat.auto_axis_types(2))
+compat.set_mesh(mesh)
 C, R = 16, 4; T = C*R
 H, G, D = 4, 2, 8
 ks = jax.random.split(jax.random.PRNGKey(1), 4)
@@ -52,6 +53,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.configs.registry import get_config
 from repro.parallel.sharding import Runtime, params_pspecs
 from repro.models.transformer import init_params, forward_hidden
@@ -59,9 +61,9 @@ from repro.core.loss import token_ce_loss
 
 # sharded ring-grad == single-device grad (HDP distribution is exact)
 cfg = get_config("llama3.2-3b").reduced()
-mesh = jax.make_mesh((4,2), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
-jax.set_mesh(mesh)
+mesh = compat.make_mesh((4,2), ("data","model"),
+                        axis_types=compat.auto_axis_types(2))
+compat.set_mesh(mesh)
 rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
              composition=(2,2), remat="none", kv_chunk=16)
 params = init_params(jax.random.PRNGKey(0), cfg, rt)
@@ -85,7 +87,8 @@ params = jax.device_put(params, shardings_from_pspecs(pspecs, mesh))
 bspecs = {k: (P() if k == "denom" else P(("data",))) for k in batch}
 batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
          for k, v in batch.items()}
-g_sharded = jax.jit(jax.grad(loss), in_shardings=(pspecs, bspecs))(params, batch)
+in_sh = compat.resolve_shardings((pspecs, bspecs), mesh)
+g_sharded = jax.jit(jax.grad(loss), in_shardings=in_sh)(params, batch)
 
 rt1 = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
               composition=(1,1,1,1), remat="none", kv_chunk=16)
@@ -98,7 +101,7 @@ def loss4(p, b):
     h = forward_hidden(p, cfg, rt4, b)
     l, _ = token_ce_loss(p, cfg, rt4, h, b["labels"], b["seg"], b["denom"])
     return l
-g_ring4 = jax.jit(jax.grad(loss4), in_shardings=(pspecs, bspecs))(params, batch)
+g_ring4 = jax.jit(jax.grad(loss4), in_shardings=in_sh)(params, batch)
 for a, b in zip(jax.tree.leaves(g_sharded), jax.tree.leaves(g_ring4)):
     np.testing.assert_allclose(np.asarray(a, np.float32),
                                np.asarray(b, np.float32), atol=3e-2, rtol=3e-2)

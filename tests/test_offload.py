@@ -50,3 +50,32 @@ def test_ratio_for_d_consistency(s, d):
     need = math.ceil((2 * act_s + (1 - r) * (ell - 2) * act_s)
                      / (ell * OF.act_bytes(COEFFS, cap)))
     assert need <= max(d, 1) + 1
+
+
+@pytest.mark.jax_feature("host_offload")
+def test_offload_remat_executes_on_host_memory():
+    """Execution side of Eq. 3: a forward under remat="offload" must
+    compile and run when the backend exposes a pinned_host memory space
+    (skips with a reason elsewhere — e.g. 0.4.x CPU has none)."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compat
+    from repro.models.transformer import forward_hidden, init_params
+    from repro.parallel.sharding import single_device_runtime
+
+    rt = dc.replace(single_device_runtime(), remat="offload",
+                    offload_periods=1)
+    with compat.use_mesh(rt.mesh):
+        cfg = get_config("llama3.2-3b").reduced()
+        params = init_params(jax.random.PRNGKey(0), cfg, rt)
+        t = 64
+        batch = {"tokens": jnp.zeros((t,), jnp.int32),
+                 "seg": jnp.ones((t,), jnp.int32),
+                 "pos": jnp.arange(t, dtype=jnp.int32)}
+        out = jax.jit(lambda p, b: forward_hidden(p, cfg, rt, b))(params,
+                                                                  batch)
+        assert np.isfinite(np.asarray(out, np.float32)).all()

@@ -1,0 +1,70 @@
+"""Property tests for the unified planner API (`repro.core.planner.plan`):
+every strategy/mode must produce a valid plan (exact token cover + capacity,
+enforced by plan() itself) on arbitrary length mixes, including the edge
+mixes that historically break schedulers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.planner import PlanSpec, plan
+
+CFG = get_config("llama-7b")
+CAPACITY = 8192
+SPEC = PlanSpec.for_config(CFG, capacity=CAPACITY, hdp=16)
+
+MODES = [("naive", "dp"), ("balance", "dp"), ("balance", "pp"),
+         ("static", "dp")]
+EDGE_BATCHES = {
+    "all_short": [64] * 200,
+    "all_long": [4 * CAPACITY] * 12,
+    "single_8x_outlier": [256] * 100 + [8 * CAPACITY],
+    "empty_batch": [],
+    "one_token": [1],
+}
+
+
+def _spec(strategy, mode):
+    return SPEC.replace(strategy=strategy, mode=mode,
+                        use_offload=strategy != "static")
+
+
+@pytest.mark.parametrize("strategy,mode", MODES)
+@pytest.mark.parametrize("batch", sorted(EDGE_BATCHES))
+def test_edge_batches_plan_valid(strategy, mode, batch):
+    lengths = EDGE_BATCHES[batch]
+    p = plan(lengths, _spec(strategy, mode))    # plan() validates internally
+    assert p.denom == sum(lengths)
+    for w in p.waves:
+        assert sum(w.composition) == SPEC.hdp   # compositions tile hdp
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       strategy_mode=st.sampled_from(MODES),
+       sigma=st.sampled_from([0.5, 1.0, 1.8]))
+def test_random_mixes_plan_valid(seed, strategy_mode, sigma):
+    rng = np.random.default_rng(seed)
+    lengths = [int(x) for x in
+               np.clip(rng.lognormal(6.5, sigma, size=50), 1, 12 * CAPACITY)]
+    p = plan(lengths, _spec(*strategy_mode))
+    assert p.denom == sum(lengths)
+    for w in p.waves:
+        assert sum(w.composition) == SPEC.hdp
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dp_balance_makespan_never_worse_than_naive(seed):
+    rng = np.random.default_rng(seed)
+    lengths = [int(x) for x in
+               np.clip(rng.lognormal(7, 1.6, size=150), 16, 40 * CAPACITY)]
+    naive = plan(lengths, SPEC.replace(strategy="naive", use_offload=False))
+    bal = plan(lengths, SPEC.replace(strategy="balance", mode="dp",
+                                     use_offload=False))
+    assert bal.stats["makespan"] <= naive.stats["makespan"] * 1.01
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError):
+        plan([128], SPEC.replace(strategy="zigzag"))

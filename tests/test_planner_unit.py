@@ -1,0 +1,80 @@
+"""Balance-scheduler specifics (Alg. 2) untested elsewhere: PP-Balance's
+round-robin bucket draw, rank_speed straggler weighting, and bucketize's
+equal-FLOPs split."""
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.balance import bucketize
+from repro.core.hdp import build_units
+from repro.core.planner import PlanSpec, plan
+
+CFG = get_config("llama-7b")
+SPEC = PlanSpec.for_config(CFG, capacity=8192, hdp=4, use_offload=False)
+
+# bimodal batch: 8 capacity-length "long" bins (quadratic attention makes
+# them ~16x the FLOPs of a packed-shorts bin) + 28 bins worth of shorts
+BIMODAL = [8192] * 8 + [512] * (28 * 16)
+LONG_IDS = set(range(8))
+
+
+def _waves_with_longs(p):
+    return [i for i, w in enumerate(p.waves)
+            if any(pc.seq_id in LONG_IDS for slot in w.slots for pc in slot)]
+
+
+def test_pp_mode_draws_round_robin_across_buckets():
+    """DP-Balance drains the longest bucket first (longs confined to the
+    earliest waves); PP-Balance draws round-robin so the expensive units
+    spread across the wave stream (Insight 1: each pipeline's stream of
+    waves has uniform cost)."""
+    dp = plan(BIMODAL, SPEC.replace(mode="dp"))
+    pp = plan(BIMODAL, SPEC.replace(mode="pp"))
+    dp_longs, pp_longs = _waves_with_longs(dp), _waves_with_longs(pp)
+    # dp: all 8 longs fit in the first ceil(8/hdp)=2 waves
+    assert max(dp_longs) <= 1, dp_longs
+    # pp: interleaved with short buckets -> longs reach later waves
+    assert max(pp_longs) > max(dp_longs), (dp_longs, pp_longs)
+    # and pp's first wave mixes both classes while dp's is long-only
+    def wave0_classes(p):
+        return {pc.seq_id in LONG_IDS
+                for slot in p.waves[0].slots for pc in slot}
+    assert wave0_classes(dp) == {True}
+    assert wave0_classes(pp) == {True, False}
+
+
+def test_rank_speed_straggler_gets_measurably_less_work():
+    rng = np.random.default_rng(11)
+    lengths = [int(x) for x in np.clip(rng.lognormal(7, 1, 200), 16, 8192)]
+    spec = SPEC.replace(hdp=8)
+    speed = np.ones(8)
+    speed[3] = 0.25                        # rank 3 runs at quarter speed
+    p = plan(lengths, spec.replace(rank_speed=speed))
+    per_rank = np.array(p.stats["per_rank_times"])
+    others = np.delete(per_rank, 3)
+    # the slow rank receives measurably less modeled work, not just "<= median"
+    assert per_rank[3] < 0.6 * others.mean(), per_rank
+    # and the uniform-speed plan does NOT starve rank 3 (control)
+    p0 = plan(lengths, spec)
+    per0 = np.array(p0.stats["per_rank_times"])
+    assert per0[3] > 0.6 * np.delete(per0, 3).mean(), per0
+
+
+def test_bucketize_splits_flops_equally_within_tolerance():
+    units = build_units(BIMODAL, 8192, 4, SPEC.coeffs,
+                        num_layers=CFG.num_layers, use_offload=False,
+                        comm=SPEC.comm)
+    total = sum(u.cost_per_rank * u.ranks for u in units)
+    for n in (2, 4, 8):
+        buckets = bucketize(units, n)
+        assert len(buckets) <= n
+        assert sum(len(b) for b in buckets) == len(units)   # nothing dropped
+        target = total / n
+        max_unit = max(u.cost_per_rank * u.ranks for u in units)
+        for i, b in enumerate(buckets[:-1]):                # last absorbs slack
+            t = sum(u.cost_per_rank * u.ranks for u in b)
+            # greedy fill overshoots by at most one unit
+            assert target <= t <= target + max_unit + 1e-9, (i, t, target)
+        # long buckets hold costlier items (sorted desc, Alg. 2 lines 3-5)
+        first = buckets[0][0].cost_per_rank * buckets[0][0].ranks
+        last = buckets[-1][-1].cost_per_rank * buckets[-1][-1].ranks
+        assert first >= last
