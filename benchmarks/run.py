@@ -1,24 +1,82 @@
 """Benchmark harness (deliverable d): one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is wall time of
-the benchmark unit; ``derived`` carries the figure's headline quantity."""
+the benchmark unit; ``derived`` carries the figure's headline quantity.
+
+Also emits ``BENCH_planner.json`` — a per-PR planner performance snapshot
+(makespan, bubble fractions, pipelined-executor bubble and planner
+wall-time on a fixed bimodal batch) so the repo's perf trajectory is
+recorded in-tree.
+"""
 from __future__ import annotations
 
+import json
 import sys
 import time
+
+SNAPSHOT_PATH = "BENCH_planner.json"
+
+
+def planner_snapshot(path: str = SNAPSHOT_PATH) -> dict:
+    """Deterministic planner benchmark on a fixed bimodal batch: every
+    strategy/mode, with plan quality (makespan / bubbles / pipelined
+    bubble at 4 stages) and planner wall-time."""
+    from benchmarks.pipeline_bubble import CAPACITY, HDP, bimodal_lengths
+    from repro.configs.registry import get_config
+    from repro.core.planner import PlanSpec, plan as plan_batch
+    from repro.parallel.pipeline import pipeline_schedule_stats
+
+    cfg = get_config("llama-7b")
+    spec = PlanSpec.for_config(cfg, capacity=CAPACITY, hdp=HDP,
+                               use_offload=False)
+    lens = bimodal_lengths()
+    cases = {
+        "static": spec.replace(strategy="static"),
+        "naive": spec.replace(strategy="naive"),
+        "balance_dp": spec.replace(strategy="balance", mode="dp"),
+        "balance_pp": spec.replace(strategy="balance", mode="pp"),
+    }
+    snap = {"batch": {"n_seqs": len(lens), "tokens": int(sum(lens)),
+                      "hdp": HDP, "capacity": CAPACITY}}
+    for name, s in cases.items():
+        t0 = time.perf_counter()
+        p = plan_batch(lens, s)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        pipe = pipeline_schedule_stats(p, num_stages=4)
+        snap[name] = {
+            "planner_wall_ms": round(wall_ms, 2),
+            "n_waves": p.stats["n_waves"],
+            "makespan": round(p.stats["makespan"], 4),
+            "bubble_frac": round(p.stats["bubble_frac"], 4),
+            "bubble_frac_lockstep": round(p.stats["bubble_frac_lockstep"],
+                                          4),
+            "bubble_frac_pipeline_s4": round(pipe["bubble_frac_pipeline"],
+                                             4),
+            "n_rounds_s4": pipe["n_rounds"],
+        }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return snap
 
 
 def main() -> None:
     from benchmarks import (ablation, case_study, data_dist, end_to_end,
-                            flops_imbalance, kernel_bench, offload_sweep)
+                            flops_imbalance, kernel_bench, offload_sweep,
+                            pipeline_bubble)
     rows = []
     for mod in (data_dist, flops_imbalance, end_to_end, case_study,
-                ablation, offload_sweep, kernel_bench):
+                ablation, offload_sweep, pipeline_bubble, kernel_bench):
         t0 = time.perf_counter()
         try:
             rows.extend(mod.run())
         except Exception as e:        # keep the harness alive per-figure
             rows.append((f"{mod.__name__}.ERROR", 0.0, repr(e)[:120]))
         sys.stderr.write(f"[{mod.__name__}] {time.perf_counter()-t0:.1f}s\n")
+    try:
+        planner_snapshot()
+        sys.stderr.write(f"[planner_snapshot] -> {SNAPSHOT_PATH}\n")
+    except Exception as e:
+        sys.stderr.write(f"[planner_snapshot] FAILED: {e!r}\n")
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

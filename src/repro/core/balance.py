@@ -2,27 +2,38 @@
 
 Faithful structure: sort the global batch by length descending, divide into
 buckets of ≈equal total FLOPs, then repeatedly top up the ranks whose
-accumulated execution time lags behind by more than δ — DP-Balance draws
-from the first (longest) non-empty bucket so each *wave* is level-uniform
-(Insight 2: only per-time-step balance matters without PP); PP-Balance
-draws round-robin across buckets so each *pipeline's stream* of waves has
-uniform cost (Insight 1).
+accumulated execution time lags behind by more than δ — each *wave* is
+level-uniform (Insight 2: only per-time-step balance matters without PP).
 
-SPMD adaptation: "assign more micro-batches to faster ranks" becomes
-placement into a (rank × wave) grid — a group unit occupies the same wave
-slot on `g` contiguous ranks; singleton units top up whichever lagging
-rank the paper's line 10-17 loop selects.
+PP-Balance (Insight 1, SPMD adaptation): with pipeline parallelism each
+wave is a pipeline *microbatch*, and the executor (parallel/pipeline.py)
+compiles one schedule per (composition, c_mult) "round", paying a
+(S-1)-slot fill/drain bubble per round.  The pipelined critical path
+``[Σ_w max_r cost + (S-1)·peak] / S`` is order-independent, so what the
+paper's "uniform micro-batches" requirement buys in a static-shape SPMD
+world is *stream homogeneity*: PP-Balance builds EVERY unit at one uniform
+CP width g* (the smallest divisor of the HDP axis covering the longest
+sequence — `uniform_cp_width`), so the whole step is a single
+composition-uniform round: one executable, one pipeline flush, and waves
+that stay level because the draw is still longest-bucket-first.  DP-Balance
+keeps each sequence's individually-optimal Eq. 3 width (cheaper without
+PP, but a heterogeneous stream that fragments a pipelined executor into
+many short flush-dominated rounds).
+
+SPMD adaptation of the paper's line 10-17 loop: "assign more micro-batches
+to faster ranks" becomes placement into a (rank × wave) grid — a group
+unit occupies the same wave slot on `g` contiguous ranks; singleton units
+top up whichever lagging rank the loop selects.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import offload as OF
 from repro.core.hdp import (Piece, StepPlan, Unit, Wave, build_units,
-                            plan_stats, seq_flops_time)
+                            plan_stats, uniform_cp_width)
 
 
 def bucketize(units: List[Unit], n_buckets: int) -> List[List[Unit]]:
@@ -53,10 +64,25 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
     ``rank_speed`` [hdp]: relative throughput per rank (straggler
     mitigation — slower ranks accumulate virtual time faster and receive
     proportionally less work)."""
-    units = build_units(lengths, capacity, hdp, coeffs,
-                        num_layers=num_layers, use_offload=use_offload,
-                        quadratic=quadratic, zigzag=zigzag, comm=comm,
-                        balance_d=True)
+    pp_width = None
+    if mode == "pp":
+        # uniform stream (see module docstring): one CP width for every
+        # unit, so all waves share one composition and the pipelined
+        # executor runs the step as a single round.  Offload planning is
+        # width-coupled (Eq. 3 trades D against r), so the uniform-width
+        # stream plans without it — recorded in plan.stats["use_offload"]
+        # below; co-planning offload with the uniform width is a ROADMAP
+        # follow-up.
+        pp_width = uniform_cp_width(lengths, capacity, hdp)
+        units = build_units(lengths, capacity, hdp, coeffs,
+                            num_layers=num_layers, use_offload=False,
+                            quadratic=quadratic, zigzag=zigzag, comm=comm,
+                            static_cp=pp_width)
+    else:
+        units = build_units(lengths, capacity, hdp, coeffs,
+                            num_layers=num_layers, use_offload=use_offload,
+                            quadratic=quadratic, zigzag=zigzag, comm=comm,
+                            balance_d=True)
     buckets = bucketize(units, n_buckets)
     if delta is None:
         costs = [u.cost_per_rank for u in units] or [0.0]
@@ -92,9 +118,12 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
         accumulated (speed-weighted) time — paper lines 8-9's lagging-rank
         targeting — then its first free wave of matching buffer size.
         Ranks run their wave queues asynchronously (plan_stats), so sparse
-        waves cost nothing; what matters is per-rank totals."""
+        waves cost nothing; what matters is per-rank totals.  pp mode
+        additionally aligns windows to width-g tiles so every wave keeps
+        the one uniform composition ``(g*,) * (hdp // g*)``."""
+        step = g if mode == "pp" else 1
         best = None
-        for s in range(0, hdp - g + 1):
+        for s in range(0, hdp - g + 1, step):
             score = prefer[s:s + g].sum()
             if best is None or score < best[0]:
                 best = (score, s)
@@ -108,21 +137,15 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
             w += 1
 
     def next_unit() -> Optional[Unit]:
-        if mode == "dp":                       # first non-empty bucket
-            for b in buckets:
-                if b:
-                    return b.pop(0)
-            return None
-        # pp: round-robin across buckets
-        nonlocal _rr
-        for k in range(len(buckets)):
-            b = buckets[(_rr + k) % len(buckets)]
+        # first (longest) non-empty bucket: each wave fills with
+        # similar-cost units, keeping it level-uniform.  In pp mode the
+        # units are additionally width-uniform, so the leveled waves also
+        # share one composition (the stream-homogeneity Insight 1 needs).
+        for b in buckets:
             if b:
-                _rr = (_rr + k + 1) % len(buckets)
                 return b.pop(0)
         return None
 
-    _rr = 0
     # Step 2-3 loop: keep topping up the laggards until all units placed
     while True:
         u = next_unit()
@@ -130,6 +153,21 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
             break
         ranks, w = find_slot(u.ranks, exec_times, u.c_mult)
         place(u, ranks, w)
+
+    if pp_width is not None:
+        # uniform stream: every wave carries the same tiled composition;
+        # unoccupied tiles are all-padding groups (block skipping turns
+        # their ring steps into no-ops), so one executable covers the step
+        for wave in waves:
+            wave.composition = (pp_width,) * (hdp // pp_width)
+        denom = int(sum(lengths))
+        plan = StepPlan(waves=waves, denom=denom, capacity=capacity)
+        plan.stats = plan_stats(plan)
+        plan.stats["mode"] = mode
+        plan.stats["delta"] = delta
+        plan.stats["pp_width"] = pp_width
+        plan.stats["use_offload"] = False   # pp overrides the request
+        return plan
 
     for w, wave in enumerate(waves):
         comp: List[int] = []
@@ -164,7 +202,9 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
 
 def _same_unit(slot_a: List[Piece], slot_b: List[Piece]) -> bool:
     """Adjacent ranks belong to one sharded unit iff they hold disjoint
-    chunks of the same single sequence."""
+    chunks of the same single sequence.  (Only the dp path reconstructs
+    compositions from slots — pp mode assigns its uniform tiling directly
+    — and dp's multi-rank units are always single long sequences.)"""
     if len(slot_a) == 0 or len(slot_b) == 0:
         return False
     sids_a = {p.seq_id for p in slot_a}

@@ -120,6 +120,21 @@ def unit_time(compute: float, comm: float) -> float:
     return max(compute, comm)
 
 
+def uniform_cp_width(lengths: Sequence[int], capacity: int, hdp: int) -> int:
+    """The smallest CP width that (a) covers the longest sequence at
+    `capacity` tokens/rank and (b) divides the HDP axis, so `DP = hdp / cp`
+    stays integral (the documented static-baseline geometry) and a
+    composition ``(g,) * (hdp // g)`` tiles the axis exactly.  Falls back to
+    the full axis when even that is too narrow (per-rank buffers then grow
+    via c_mult instead).  Shared by the static baseline's auto CP degree and
+    PP-Balance's uniform stream width."""
+    need = max(1, -(-max(lengths, default=0) // capacity))
+    for g in range(min(need, hdp), hdp + 1):
+        if hdp % g == 0:
+            return g
+    return hdp
+
+
 # ---------------------------------------------------------------------------
 # unit construction (shared by Alg. 1 and Alg. 2)
 # ---------------------------------------------------------------------------
@@ -202,10 +217,22 @@ def build_units(lengths: Sequence[int], capacity: int, hdp: int,
                           pieces_per_rank=pieces, offload_ratio=r,
                           seq_ids=(sid,), c_mult=_c_mult(pieces, capacity)))
 
-    # short sequences: pack to capacity (Alg. 1 lines 7-9)
+    # short sequences: pack to capacity (Alg. 1 lines 7-9).  Sharded bins
+    # (static_cp > 1) pack by the zigzag *footprint* 2g·ceil(len/2g), not
+    # the raw length: every rank receives 2 ceil-rounded chunks per
+    # sequence, and packing raw lengths to the full g·capacity could push
+    # a rank a few tokens over capacity, silently doubling the wave's
+    # buffer (c_mult = 2) for nothing.
     cap = capacity * (static_cp or 1)
     if pack_ids:
-        bins = best_fit_decreasing(pack_lens, cap, ids=pack_ids)
+        g_pack = static_cp or 1
+        if g_pack > 1:
+            eff = [2 * g_pack * -(-ln // (2 * g_pack)) for ln in pack_lens]
+        else:
+            eff = pack_lens
+        bins = best_fit_decreasing(eff, cap, ids=pack_ids)
+        real_len = dict(zip(pack_ids, pack_lens))
+        bins = [[(sid, real_len[sid]) for sid, _ in b] for b in bins]
         for b in bins:
             g = static_cp or 1
             pieces = [[] for _ in range(g)]

@@ -17,7 +17,6 @@ before returning: a plan that reaches an executor is a checked plan.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -26,7 +25,8 @@ import numpy as np
 from repro.core import offload as OF
 from repro.core.balance import balance_plan
 from repro.core.hdp import (CommModel, StepPlan, kv_bytes_per_token,
-                            naive_hdp_plan, static_cp_plan, validate_plan)
+                            naive_hdp_plan, static_cp_plan,
+                            uniform_cp_width, validate_plan)
 
 STRATEGIES = ("balance", "naive", "static")
 
@@ -40,8 +40,11 @@ class PlanSpec:
     coeffs    Eq. 3 per-layer cost model T(s)/Act(s)
     comm      ring dist-attention traffic model (None = compute-only)
     rank_speed  [hdp] relative throughput (straggler mitigation), or None
-    cp_degree   static strategy: fixed CP width (None = pow2 of longest seq)
+    cp_degree   static strategy: fixed CP width (None = auto divisor width)
     balance_d   naive strategy: Eq. 3 D floor with balanced group sizing
+    num_stages  pipeline depth the plan will execute on (stamped into
+                plan.stats so the executor layer can match plan ↔ schedule;
+                mode="pp" is the intended pairing when > 1)
     """
     capacity: int
     hdp: int
@@ -49,6 +52,7 @@ class PlanSpec:
     num_layers: int
     strategy: str = "balance"
     mode: str = "dp"
+    num_stages: int = 1
     use_offload: bool = True
     balance_d: bool = False
     quadratic: bool = True
@@ -82,11 +86,13 @@ class PlanSpec:
 
 
 def auto_cp_degree(lengths: Sequence[int], capacity: int, hdp: int) -> int:
-    """The baseline's CP width: next power of two covering the longest
-    sequence at `capacity` tokens/rank, capped at the HDP size."""
-    longest = max(lengths, default=0)
-    return min(hdp, 2 ** math.ceil(
-        math.log2(max(1, -(-longest // capacity)))))
+    """The baseline's CP width: the smallest width covering the longest
+    sequence at `capacity` tokens/rank that also DIVIDES the HDP axis, so
+    the documented `DP = hdp / cp` geometry always holds.  (The old
+    next-power-of-two rule could exceed the largest pow2 divisor of a
+    non-pow2 `hdp` — e.g. hdp=12 with a 8·capacity sequence gave cp=8,
+    12/8 non-integral; for pow2 `hdp` the divisor rule is identical.)"""
+    return uniform_cp_width(lengths, capacity, hdp)
 
 
 def plan(lengths: Sequence[int], spec: PlanSpec) -> StepPlan:
@@ -115,5 +121,6 @@ def plan(lengths: Sequence[int], spec: PlanSpec) -> StepPlan:
             f"unknown strategy {spec.strategy!r}; expected one of "
             f"{STRATEGIES}")
     p.stats["strategy"] = spec.strategy
+    p.stats["num_stages"] = spec.num_stages
     validate_plan(p, lengths)
     return p

@@ -73,12 +73,13 @@ class GlobalScheduler:
     def __init__(self, dataset: SyntheticDataset, cfg: ModelConfig, *,
                  capacity: int, hdp: int, mode: str = "dp",
                  strategy: str = "balance", use_offload: bool = True,
+                 num_stages: int = 1,
                  rank_speed: Optional[np.ndarray] = None):
         self.ds = dataset
         self.cfg = cfg
         self.spec = PlanSpec.for_config(
             cfg, capacity=capacity, hdp=hdp, strategy=strategy, mode=mode,
-            use_offload=use_offload)
+            use_offload=use_offload, num_stages=num_stages)
         self.rank_speed = rank_speed            # straggler mitigation weights
 
     @property
@@ -143,13 +144,31 @@ class WaveMaterializer:
 
     def iter_step(self, step: int, plan: StepPlan) -> Iterator[LoadedWave]:
         """Prefetching iterator: wave w+1 builds while w executes."""
+        yield from self._prefetched(
+            lambda: (self.materialize(step, w) for w in plan.waves))
+
+    def iter_rounds(self, step: int, plan: StepPlan,
+                    rounds) -> Iterator[Dict[str, np.ndarray]]:
+        """Prefetching iterator over pipelined rounds: yields each round's
+        microbatches stacked to [M, ...] (round r+1 materializes in the
+        background while round r executes — the pipelined analogue of
+        `iter_step`)."""
+        def produce():
+            for rd in rounds:
+                loaded = [self.materialize(step, plan.waves[i])
+                          for i in rd.wave_ids]
+                yield {k: np.stack([lw.batch[k] for lw in loaded])
+                       for k in loaded[0].batch}
+        yield from self._prefetched(produce)
+
+    def _prefetched(self, produce) -> Iterator:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = object()
 
         def producer():
             try:
-                for w in plan.waves:
-                    q.put(self.materialize(step, w))
+                for item in produce():
+                    q.put(item)
             finally:
                 q.put(stop)
 

@@ -22,6 +22,7 @@ import subprocess
 import sys
 import time
 import traceback
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -110,12 +111,14 @@ def needs_fsdp(cfg: ModelConfig, rt: Runtime) -> bool:
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                capacity: int = DEFAULT_CAPACITY, remat: str = "full",
                cfg_override=None, cost_mode: bool = False,
-               seq_parallel: bool = False, moe_impl: str = "gather"):
+               seq_parallel: bool = False, moe_impl: str = "gather",
+               num_stages: int = 1, pp_microbatches: Optional[int] = None):
     cfg = cfg_override or get_config(arch)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, num_stages=num_stages)
     compat.set_mesh(mesh)
     rt = Runtime(mesh=mesh, hdp_axes=hdp_axes_of(mesh), model_axis="model",
+                 stage_axis="stage" if num_stages > 1 else None,
                  remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl,
                  # cost lowering: unroll ring steps + period loop + use
                  # single-block attention so XLA's once-counted while loops
@@ -127,6 +130,28 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         batch, comp, t_wave, n_waves = wave_batch_structs(
             cfg, shape_name, rt, capacity)
         rt = rt.with_composition(comp)
+        if shape.kind == "train" and num_stages > 1:
+            # pipelined train cell: one round of M microbatch waves
+            from repro.optim import adamw
+            from repro.optim.adamw import AdamWConfig
+            from repro.train.train_step import jitted_pipeline_train_step
+            from repro.models.transformer import init_params
+            m = pp_microbatches or num_stages
+            batch = {k: (v if k == "denom" else jax.ShapeDtypeStruct(
+                (m,) + v.shape, v.dtype)) for k, v in batch.items()}
+            fsdp = needs_fsdp(cfg, rt)
+            fn = jitted_pipeline_train_step(cfg, rt, AdamWConfig(), batch,
+                                            fsdp=fsdp,
+                                            donate=not cost_mode)
+            params_like = jax.eval_shape(
+                lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
+            opt_like = jax.eval_shape(adamw.init_state, params_like)
+            lowered = fn.lower(params_like, opt_like, batch)
+            tokens = t_wave * m
+            meta = {"composition": f"({comp[0]})x{len(comp)}",
+                    "num_stages": num_stages, "pp_microbatches": m,
+                    "tokens_per_round": tokens, "fsdp": fsdp}
+            return cfg, shape, lowered, tokens, meta, mesh
         if shape.kind == "train":
             from repro.optim.adamw import AdamWConfig
             from repro.train.train_step import jitted_train_step
@@ -238,11 +263,17 @@ def _cost_probe(arch, shape_name, cfg, *, multi_pod, capacity, remat,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              capacity: int = DEFAULT_CAPACITY, skip_roofline: bool = False,
              remat: str = "full", seq_parallel: bool = False,
-             moe_impl: str = "gather"):
+             moe_impl: str = "gather", num_stages: int = 1,
+             pp_microbatches: Optional[int] = None):
     t0 = time.time()
+    if num_stages > 1:
+        # the Δ-extrapolation cost probe assumes the non-pipelined period
+        # scan structure; pipelined cells report memory/compile data only
+        skip_roofline = True
     cfg, shape, lowered, tokens, meta, mesh = lower_cell(
         arch, shape_name, multi_pod=multi_pod, capacity=capacity,
-        remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl)
+        remat=remat, seq_parallel=seq_parallel, moe_impl=moe_impl,
+        num_stages=num_stages, pp_microbatches=pp_microbatches)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -252,7 +283,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mem = compiled.memory_analysis()
     rec = {
         "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
         "chips": chips, "tokens": tokens, **meta,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "params": cfg.param_count(),
@@ -306,6 +337,12 @@ def main():
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--moe-impl", default="gather")
+    ap.add_argument("--num-stages", type=int, default=1,
+                    help="pipeline stages: >1 lowers the pipelined round "
+                         "step on a stage x data x model mesh")
+    ap.add_argument("--pp-microbatches", type=int, default=None,
+                    help="microbatches per pipelined round "
+                         "(default: num_stages)")
     args = ap.parse_args()
 
     if args.all:
@@ -333,7 +370,9 @@ def main():
     rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
                    capacity=args.capacity, remat=args.remat,
                    skip_roofline=args.skip_roofline,
-                   seq_parallel=args.seq_parallel, moe_impl=args.moe_impl)
+                   seq_parallel=args.seq_parallel, moe_impl=args.moe_impl,
+                   num_stages=args.num_stages,
+                   pp_microbatches=args.pp_microbatches)
     rec["seq_parallel"] = args.seq_parallel
     rec["moe_impl"] = args.moe_impl
     line = json.dumps(rec)

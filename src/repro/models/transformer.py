@@ -332,9 +332,9 @@ def _split_stacked(blocks, k: int):
     return head, tail
 
 
-def forward_hidden(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
-    """batch: {"tokens" [T] | "embeds" [T,d], "seg" [T], "pos" [T] or [T,3]}
-    -> final hidden [T, d]."""
+def embed_frontend(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
+    """Token/embedding frontend + the un-scanned head blocks (DeepSeek
+    dense head).  First-stage work under pipeline parallelism."""
     seg, pos = batch["seg"], batch["pos"]
     if cfg.frontend == "none":
         x = embed_tokens(params, cfg, batch["tokens"])
@@ -347,12 +347,21 @@ def forward_hidden(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
                                        cfg.d_model).astype(x.dtype)
     x = jax.lax.with_sharding_constraint(x, P(rt.hdp_axes, None))
 
-    head_n = head_layer_count(cfg)
     for i, bp in enumerate(params["head_blocks"]):
         x = block_forward(bp, cfg, rt, x, seg, pos, i)
+    return x
 
+
+def apply_periods(blocks, cfg: ModelConfig, rt: Runtime, x, seg, pos):
+    """Run a window of stacked layer periods over the residual stream.
+
+    ``blocks``: tuple (per period position) of stacked [n, ...] params —
+    the full stack for the plain forward, or one stage's contiguous slice
+    under pipeline parallelism (parallel/pipeline.py vmaps this function
+    over the stage axis).  Handles remat / offload / cost-unroll.
+    """
     period = len(cfg.layer_pattern)
-
+    head_n = head_layer_count(cfg)
     resid_spec = P(rt.hdp_axes, rt.model_axis if rt.seq_parallel else None)
 
     def period_body(x, bp_stack):
@@ -367,7 +376,7 @@ def forward_hidden(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
         x = jax.lax.with_sharding_constraint(x, resid_spec)
         return x, None
 
-    blocks = tuple(params["blocks"])
+    blocks = tuple(blocks)
     n_periods = jax.tree.leaves(blocks)[0].shape[0]
 
     def run_scan(x, stacked, policy):
@@ -397,7 +406,15 @@ def forward_hidden(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
             x = run_scan(x, tail_stack, None)
     else:
         x = run_scan(x, blocks, None)
+    return x
 
+
+def forward_hidden(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
+    """batch: {"tokens" [T] | "embeds" [T,d], "seg" [T], "pos" [T] or [T,3]}
+    -> final hidden [T, d]."""
+    x = embed_frontend(params, cfg, rt, batch)
+    x = apply_periods(params["blocks"], cfg, rt, x, batch["seg"],
+                      batch["pos"])
     return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
 
 

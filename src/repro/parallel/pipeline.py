@@ -1,0 +1,276 @@
+"""Pipeline-parallel execution subsystem: PP-Balance runnable end-to-end
+on the hdp × model × stage mesh.
+
+The model's scanned layer periods are split into ``num_stages`` contiguous
+windows on the mesh's "stage" axis (the stacked block params shard their
+leading [n_periods] dim over it — parallel/sharding.py), and each HDP
+*wave* becomes one pipeline *microbatch* — PP-Balance's unit of
+uniformity (core/balance.py).
+
+Schedule: a 1F1B-style **wavefront** in SPMD form.  A shifting buffer
+holds one in-flight microbatch per stage; every slot all stages compute
+in parallel (``jax.vmap(apply_periods, spmd_axis_name="stage")`` — one
+period-window per stage), then the buffer shifts one stage down:
+``jnp.roll`` on the stage-sharded leading dim under a sharding
+constraint, which GSPMD lowers to a CollectivePermute between adjacent
+stages (the activation transfer).  The microbatch entering stage 0 is
+embedded at the top level (first-stage work), the microbatch leaving the
+last stage is collected; final norm + LM head + token-level loss run on
+the collected stream (last-stage work).  A round of M microbatches takes
+M + S - 1 slots — S-1 fill + S-1 drain, the same bubble count as 1F1B —
+and ``jax.grad`` through the ``lax.scan`` reverses the wavefront for the
+backward pipeline.  Warm-up / drain slots carry all-padding microbatches
+(seg = 0): block skipping makes them near-free and fully-masked rows
+finalize to exact zeros, so they contribute nothing to loss or grads.
+
+Heterogeneous plans: one compiled schedule exists per (composition,
+c_mult, offload) key, so the executor groups a plan's wave queue into
+**rounds** of like waves (waves commute under the token-level loss,
+Eq. 2 — every microbatch divides by the same global denom).  Each round
+pays its own pipeline flush; this is exactly why PP-Balance emits a
+composition-uniform stream (Insight 1) while DP-Balance's heterogeneous
+stream fragments into flush-dominated rounds —
+``pipeline_schedule_stats`` scores any plan under this schedule and
+``benchmarks/pipeline_bubble.py`` measures the comparison.
+
+Known follow-ups (ROADMAP): interleaved (virtual-stage) schedules, and
+the PP × offload interaction (offload windows currently apply per stage
+window rather than per global layer index).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.hdp import StepPlan
+from repro.core.loss import token_ce_loss
+from repro.models import layers as L
+from repro.models.transformer import (apply_periods, embed_frontend,
+                                      head_layer_count)
+from repro.parallel.sharding import Runtime
+
+
+# ---------------------------------------------------------------------------
+# stage partitioning
+# ---------------------------------------------------------------------------
+
+def num_scan_periods(cfg: ModelConfig) -> int:
+    return (cfg.num_layers - head_layer_count(cfg)) // len(cfg.layer_pattern)
+
+
+def assert_pipeline_ready(cfg: ModelConfig, rt: Runtime) -> None:
+    s = rt.num_stages
+    if s <= 1:
+        raise ValueError("pipeline execution needs a stage axis with "
+                         "num_stages > 1 (Runtime.stage_axis)")
+    n = num_scan_periods(cfg)
+    if n % s != 0:
+        raise ValueError(
+            f"{cfg.name}: {n} scan periods do not split into {s} equal "
+            f"pipeline stages (choose num_stages dividing {n})")
+
+
+def stage_stacked(blocks, num_stages: int):
+    """Stacked block params [n_periods, ...] -> [S, n_periods/S, ...]:
+    stage s's contiguous period window on the leading axis.  A free
+    reshape under the stage-sharded storage layout (the split dim stays
+    stage-major)."""
+    return jax.tree.map(
+        lambda a: a.reshape((num_stages, a.shape[0] // num_stages)
+                            + a.shape[1:]), tuple(blocks))
+
+
+# ---------------------------------------------------------------------------
+# the pipelined forward
+# ---------------------------------------------------------------------------
+
+def pipeline_hidden(params, cfg: ModelConfig, rt: Runtime, batch):
+    """Run M stacked microbatches through the stage pipeline.
+
+    batch: {"tokens" [M,T] | "embeds" [M,T,d], "seg" [M,T],
+            "pos" [M,T] or [M,T,3]} -> final hidden [M, T, d]
+    (post final-norm; the LM head stays with the loss).
+    """
+    assert_pipeline_ready(cfg, rt)
+    s_axis = rt.stage_axis
+    S = rt.num_stages
+    seg = batch["seg"]
+    M, T = seg.shape[0], seg.shape[1]
+    stages = stage_stacked(params["blocks"], S)
+
+    feed_keys = [k for k in ("tokens", "embeds", "seg", "pos") if k in batch]
+
+    def pad_drain(a):
+        # S-1 all-padding microbatches flush the pipeline (seg=0 rows
+        # finalize to zeros — see module docstring)
+        return jnp.pad(a, [(0, S - 1)] + [(0, 0)] * (a.ndim - 1))
+
+    feed = {k: pad_drain(batch[k]) for k in feed_keys}
+
+    vstage = jax.vmap(lambda bs, x, sg, ps: apply_periods(bs, cfg, rt, x,
+                                                          sg, ps),
+                      spmd_axis_name=s_axis)
+
+    def body(carry, mb):
+        buf_x, buf_seg, buf_pos = carry
+        # stage transfer: the wavefront advances one stage.  jnp.roll on
+        # the stage-sharded dim lowers to a CollectivePermute between
+        # neighbouring stages; row 0's wrap-around value is immediately
+        # overwritten by the microbatch entering the pipeline.  The stage
+        # sharding itself is pinned by the spmd_axis_name vmap below and
+        # by the carry's initial sharding constraint — re-constraining
+        # inside the scan body trips an XLA-CPU grad-of-scan
+        # miscompilation (the same class the SSM mixers avoid with a
+        # fully-manual shard_map; see parallel/sharding.py).
+        buf_x, buf_seg, buf_pos = (jnp.roll(b, 1, axis=0)
+                                   for b in (buf_x, buf_seg, buf_pos))
+        x0 = embed_frontend(params, cfg, rt, mb)         # first-stage work
+        buf_x = buf_x.at[0].set(x0.astype(buf_x.dtype))
+        buf_seg = buf_seg.at[0].set(mb["seg"])
+        buf_pos = buf_pos.at[0].set(mb["pos"])
+        buf_x = vstage(stages, buf_x, buf_seg, buf_pos)  # all stages compute
+        return (buf_x, buf_seg, buf_pos), buf_x[-1]
+
+    dtype = L.activation_dtype(cfg)
+    pos0 = jnp.zeros((S,) + batch["pos"].shape[1:], batch["pos"].dtype)
+    carry0 = (jnp.zeros((S, T, cfg.d_model), dtype),
+              jnp.zeros((S, T), seg.dtype), pos0)
+    carry0 = (
+        jax.lax.with_sharding_constraint(carry0[0],
+                                         P(s_axis, rt.hdp_axes, None)),
+        jax.lax.with_sharding_constraint(carry0[1], P(s_axis, rt.hdp_axes)),
+        jax.lax.with_sharding_constraint(
+            carry0[2], P(s_axis, rt.hdp_axes, None) if pos0.ndim == 3
+            else P(s_axis, rt.hdp_axes)))
+    _, outs = jax.lax.scan(body, carry0, feed)
+    hidden = outs[S - 1:]                                # microbatches 0..M-1
+    return L.rmsnorm(params["final_norm"], hidden, cfg.norm_eps)
+
+
+def pipeline_loss_fn(params, cfg: ModelConfig, rt: Runtime, batch):
+    """Token-level loss over a pipelined round (Eq. 1-2 parity with the
+    non-PP path: every microbatch divides by the same global denom, so
+    the round's loss equals the sum of its waves' single-wave losses)."""
+    hidden = pipeline_hidden(params, cfg, rt, batch)
+    m, t, d = hidden.shape
+    return token_ce_loss(params, cfg, rt, hidden.reshape(m * t, d),
+                         batch["labels"].reshape(-1),
+                         batch["seg"].reshape(-1), batch["denom"])
+
+
+def make_pipeline_grad_step(cfg: ModelConfig, rt: Runtime):
+    """Accumulation step over one pipelined round (the PP analogue of
+    make_accum_steps' grad_step; reuse its apply_step for the optimizer)."""
+
+    def grad_step(params, grad_accum, batch, rt_round: Runtime):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: pipeline_loss_fn(p, cfg, rt_round, batch),
+            has_aux=True)(params)
+        grad_accum = jax.tree.map(jnp.add, grad_accum, grads)
+        return grad_accum, {"loss": loss, **metrics}
+
+    return grad_step
+
+
+def make_pipeline_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg):
+    """Fused round step: grad over the pipelined round + optimizer apply
+    (used by the dry-run's pipelined train cells)."""
+    from repro.optim import adamw
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: pipeline_loss_fn(p, cfg, rt, batch),
+            has_aux=True)(params)
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state,
+                                                    opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# plan -> rounds (the executor's view of a wave queue)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Round:
+    """A maximal group of like waves: one compiled pipelined schedule."""
+    wave_ids: List[int]
+    composition: Tuple[int, ...]
+    c_mult: int
+    offload_ratio: float
+
+
+def round_key(wave) -> Tuple:
+    return (tuple(wave.composition), wave.c_mult,
+            round(wave.offload_ratio, 2))
+
+
+def pipeline_rounds(plan: StepPlan) -> List[Round]:
+    """Group a plan's wave queue by (composition, c_mult, offload) into
+    pipelined rounds.  Grouping is global (not merely contiguous): waves
+    commute under the token-level loss, so reordering the queue is free,
+    and maximal rounds minimize pipeline flushes.  Round order follows
+    first appearance, wave order within a round follows the stream."""
+    order: List[Tuple] = []
+    groups: Dict[Tuple, List[int]] = {}
+    for i, w in enumerate(plan.waves):
+        k = round_key(w)
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append(i)
+    out = []
+    for k in order:
+        ids = groups[k]
+        w0 = plan.waves[ids[0]]
+        out.append(Round(wave_ids=ids, composition=tuple(w0.composition),
+                         c_mult=w0.c_mult,
+                         offload_ratio=max(plan.waves[i].offload_ratio
+                                           for i in ids)))
+    return out
+
+
+def pipeline_schedule_stats(plan: StepPlan, num_stages: int) -> Dict:
+    """Analytic lockstep schedule of the pipelined executor.
+
+    Within a round of M waves the wavefront advances one microbatch per
+    slot: slot t runs wave t-s on stage s, and the SPMD barrier makes the
+    slot cost max over in-flight waves of (wave max-rank cost / S).  Each
+    round spans M + S - 1 slots (S-1 fill + S-1 drain).  ``ideal`` is the
+    mean per-device busy time (Σ_w mean_r cost / S); the bubble fraction
+    folds together within-wave imbalance, cross-wave heterogeneity inside
+    a round's window, and per-round flushes — the quantity PP-Balance's
+    uniform stream minimizes (paper Insight 1)."""
+    S = max(1, num_stages)
+    rounds = pipeline_rounds(plan)
+    makespan = 0.0
+    peak = 0.0
+    for rd in rounds:
+        costs = [max(plan.waves[i].costs) for i in rd.wave_ids]
+        m = len(costs)
+        peak = max(peak, max(costs))
+        for t in range(m + S - 1):
+            window = costs[max(0, t - S + 1):t + 1]
+            makespan += max(window) / S
+    hdp = len(plan.waves[0].costs) if plan.waves else 1
+    per_rank = np.zeros(hdp)
+    for w in plan.waves:
+        per_rank += np.asarray(w.costs)
+    ideal = float(per_rank.mean()) / S
+    return {
+        "num_stages": S,
+        "n_rounds": len(rounds),
+        "round_sizes": [len(rd.wave_ids) for rd in rounds],
+        "makespan_pipeline": makespan,
+        "ideal_per_device": ideal,
+        "bubble_frac_pipeline": 1.0 - ideal / makespan if makespan > 0
+        else 0.0,
+        "peak_wave_cost": peak,
+    }

@@ -1,8 +1,13 @@
 """Mesh runtime + parameter sharding rules.
 
-The production mesh axes are ("pod",) "data", "model" (launch/mesh.py).  The
-**HDP axis is ("pod","data") combined** — ByteScale's d_hdp = d_dp·d_cp as a
-single token axis; "model" is 16-way tensor parallelism.
+The production mesh axes are ("pod",) ("stage",) "data", "model"
+(launch/mesh.py).  The **HDP axis is ("pod","data") combined** —
+ByteScale's d_hdp = d_dp·d_cp as a single token axis; "model" is 16-way
+tensor parallelism; an optional "stage" axis carries pipeline parallelism
+(parallel/pipeline.py): the stacked per-period block parameters shard
+their leading [n_periods] dim over it, so stage s stores exactly its
+contiguous window of n_periods/num_stages periods (embed / head / norms
+stay stage-replicated — only first/last stage ever computes with them).
 
 Parameter sharding is rule-based (MaxText-style): ordered (predicate ->
 spec) rules matched against the parameter's path, applied with
@@ -29,6 +34,7 @@ class Runtime:
     mesh: Mesh
     hdp_axes: Tuple[str, ...] = ("data",)
     model_axis: Optional[str] = "model"
+    stage_axis: Optional[str] = None  # pipeline axis (parallel/pipeline.py)
     composition: Tuple[int, ...] = (1,)
     attn_impl: str = "ref"            # ref | pallas
     remat: str = "full"               # none | full | offload
@@ -46,6 +52,11 @@ class Runtime:
     @property
     def hdp_size(self) -> int:
         return int(np.prod([self.mesh.shape[a] for a in self.hdp_axes]))
+
+    @property
+    def num_stages(self) -> int:
+        return (int(self.mesh.shape[self.stage_axis])
+                if self.stage_axis else 1)
 
     def with_composition(self, comp: Tuple[int, ...]) -> "Runtime":
         return dataclasses.replace(self, composition=tuple(comp))
@@ -161,15 +172,23 @@ def params_pspecs(params, cfg: ModelConfig, rt: Runtime):
     layout = rt.layout(cfg)
     model = rt.model_axis
 
+    stage = rt.stage_axis if rt.num_stages > 1 else None
+
     def rule(path, leaf):
         name = _path_str(path)
         stacked = name.split("/", 1)[0] == "blocks"
-        # stacked block params carry a leading [n_periods] dim
+        # stacked block params carry a leading [n_periods] dim; under
+        # pipeline parallelism that dim shards over the stage axis (stage
+        # s holds its contiguous periods window — parallel/pipeline.py)
         if stacked:
+            if stage is not None:
+                assert leaf.shape[0] % rt.num_stages == 0, (
+                    leaf.shape, rt.num_stages,
+                    "scan periods must divide evenly into pipeline stages")
             sub = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
             spec = param_spec(path, sub, model=model,
                               kv_sharded=layout.kv_sharded)
-            return P(None, *spec)
+            return P(stage, *spec)
         return param_spec(path, leaf, model=model,
                           kv_sharded=layout.kv_sharded)
 

@@ -88,11 +88,19 @@ def batch_pspecs(cfg: ModelConfig, rt: Runtime, batch_like) -> dict:
     return specs
 
 
-def jitted_train_step(cfg: ModelConfig, rt: Runtime,
-                      opt_cfg: adamw.AdamWConfig, batch_like, *,
-                      fsdp: bool = False, donate: bool = True):
-    """jit(train_step) with explicit in/out shardings.  ``batch_like`` may be
-    ShapeDtypeStructs (dry-run) or concrete arrays."""
+def pipeline_batch_pspecs(cfg: ModelConfig, rt: Runtime, batch_like) -> dict:
+    """Specs for a stacked round of microbatches [M, ...]: the leading
+    microbatch-stream dim is replicated (the pipeline scan consumes it one
+    wave per slot); inner dims shard like a single wave's batch."""
+    inner = {k: (jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                 if k != "denom" else v)
+             for k, v in batch_like.items()}
+    specs = batch_pspecs(cfg, rt, inner)
+    return {k: (s if k == "denom" else P(None, *s))
+            for k, s in specs.items()}
+
+
+def _step_shardings(cfg: ModelConfig, rt: Runtime, fsdp: bool):
     params_like = jax.eval_shape(
         lambda k: init_params(k, cfg, rt), jax.random.PRNGKey(0))
     pspecs = params_pspecs(params_like, cfg, rt)
@@ -101,11 +109,40 @@ def jitted_train_step(cfg: ModelConfig, rt: Runtime,
         pspecs = jax.tree.map(
             lambda s, p: zero1_spec(s, p.shape, rt), pspecs, params_like)
     ospecs = opt_state_pspecs(pspecs, params_like, rt)
+    return pspecs, ospecs
+
+
+def jitted_train_step(cfg: ModelConfig, rt: Runtime,
+                      opt_cfg: adamw.AdamWConfig, batch_like, *,
+                      fsdp: bool = False, donate: bool = True):
+    """jit(train_step) with explicit in/out shardings.  ``batch_like`` may be
+    ShapeDtypeStructs (dry-run) or concrete arrays."""
+    pspecs, ospecs = _step_shardings(cfg, rt, fsdp)
     bspecs = batch_pspecs(cfg, rt, batch_like)
 
     step = make_train_step(cfg, rt, opt_cfg)
     # resolve_shardings: bare PartitionSpecs in jit shardings only work on
     # jax >= 0.5 under set_mesh; NamedSharding works on every version
+    return jax.jit(
+        step,
+        in_shardings=resolve_shardings((pspecs, ospecs, bspecs), rt.mesh),
+        out_shardings=resolve_shardings((pspecs, ospecs, None), rt.mesh),
+        donate_argnums=(0, 1) if donate else ())
+
+
+def jitted_pipeline_train_step(cfg: ModelConfig, rt: Runtime,
+                               opt_cfg: adamw.AdamWConfig, batch_like, *,
+                               fsdp: bool = False, donate: bool = True):
+    """Pipelined analogue of `jitted_train_step`: one fused round step over
+    stacked microbatches [M, ...] on a stage × data × model mesh (stacked
+    block params stage-sharded via params_pspecs)."""
+    from repro.parallel.pipeline import (assert_pipeline_ready,
+                                         make_pipeline_train_step)
+    assert_pipeline_ready(cfg, rt)
+    pspecs, ospecs = _step_shardings(cfg, rt, fsdp)
+    bspecs = pipeline_batch_pspecs(cfg, rt, batch_like)
+
+    step = make_pipeline_train_step(cfg, rt, opt_cfg)
     return jax.jit(
         step,
         in_shardings=resolve_shardings((pspecs, ospecs, bspecs), rt.mesh),

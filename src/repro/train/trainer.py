@@ -6,7 +6,11 @@ validated entry point); each wave dispatches through a per-(composition,
 c_mult, offload) jitted executable (the compile cache is ByteScale's
 NCCL-group cache analogue); gradients accumulate with token-level loss
 scaling and the optimizer applies once (Eq. 2 — bit-equivalent to plain
-DP).  Version-sensitive JAX surfaces (shard_map, meshes, host offload) are
+DP).  On a mesh with a stage axis (Runtime.num_stages > 1) the wave queue
+instead runs through the pipelined executor: waves group into rounds of
+like (composition, c_mult, offload) and each round executes the wavefront
+microbatch schedule of parallel/pipeline.py, each wave one pipeline
+microbatch (PP-Balance pairs with this path via TrainerConfig.mode="pp").  Version-sensitive JAX surfaces (shard_map, meshes, host offload) are
 reached via `repro.compat`, so the loop runs on jax 0.4.x and ≥0.5.
 
 Fault tolerance: periodic async checkpoints (atomic + hash-verified) with
@@ -31,6 +35,10 @@ from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
 from repro.models.transformer import init_params
 from repro.optim import adamw
+from repro.parallel.pipeline import (assert_pipeline_ready,
+                                     make_pipeline_grad_step,
+                                     pipeline_rounds,
+                                     pipeline_schedule_stats)
 from repro.parallel.sharding import Runtime
 from repro.train.train_step import make_accum_steps
 
@@ -67,6 +75,10 @@ class Trainer:
         self.opt_state = adamw.init_state(self.params)
         self.step = 0
         self.grad_step, self.apply_step = make_accum_steps(cfg, rt, opt_cfg)
+        self.pipelined = rt.num_stages > 1
+        if self.pipelined:
+            assert_pipeline_ready(cfg, rt)
+            self.pipeline_grad_step = make_pipeline_grad_step(cfg, rt)
         self._exec_cache: Dict[Tuple, object] = {}
         self.ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
         self.rank_times = np.zeros(rt.hdp_size)
@@ -80,17 +92,32 @@ class Trainer:
         if scheduler.spec.use_offload and not self.offload_ok:
             scheduler.spec = scheduler.spec.replace(use_offload=False)
 
+    def _wave_rt(self, composition, offload_ratio) -> Runtime:
+        rt_wave = self.rt.with_composition(composition)
+        if self.offload_ok and offload_ratio > 0:
+            import dataclasses as dc
+            rt_wave = dc.replace(
+                rt_wave, remat="offload",
+                offload_periods=offload_periods(self.cfg, offload_ratio))
+        return rt_wave
+
     def _wave_fn(self, composition, c_mult, offload_ratio):
         key = (composition, c_mult, round(offload_ratio, 2))
         if key not in self._exec_cache:
-            rt_wave = self.rt.with_composition(composition)
-            if self.offload_ok and offload_ratio > 0:
-                import dataclasses as dc
-                rt_wave = dc.replace(
-                    rt_wave, remat="offload",
-                    offload_periods=offload_periods(self.cfg, offload_ratio))
+            rt_wave = self._wave_rt(composition, offload_ratio)
             self._exec_cache[key] = jax.jit(
                 lambda p, g, b: self.grad_step(p, g, b, rt_wave))
+        return self._exec_cache[key]
+
+    def _round_fn(self, composition, c_mult, offload_ratio, n_waves: int):
+        """Pipelined executable for a round of ``n_waves`` like waves —
+        the compile-cache analogue of `_wave_fn` with the microbatch
+        stream length as part of the key."""
+        key = ("pp", composition, c_mult, round(offload_ratio, 2), n_waves)
+        if key not in self._exec_cache:
+            rt_round = self._wave_rt(composition, offload_ratio)
+            self._exec_cache[key] = jax.jit(
+                lambda p, g, b: self.pipeline_grad_step(p, g, b, rt_round))
         return self._exec_cache[key]
 
     def resume_if_possible(self):
@@ -121,12 +148,32 @@ class Trainer:
         losses = []
         t0 = time.time()
         wave_costs = np.zeros(self.sched.hdp)
-        for lw in self.loader.iter_step(self.step, plan):
-            batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
-            batch["denom"] = jnp.float32(denom)
-            fn = self._wave_fn(lw.composition, lw.c_mult, lw.offload_ratio)
-            grads, metrics = fn(self.params, grads, batch)
-            losses.append(float(metrics["loss"]))
+        rec_extra = {}
+        if self.pipelined:
+            # pipelined executor: the wave queue runs as rounds of like
+            # waves, each round one wavefront schedule (parallel/pipeline);
+            # round r+1 materializes in the background while r executes
+            rounds = pipeline_rounds(plan)
+            for rd, stacked in zip(rounds, self.loader.iter_rounds(
+                    self.step, plan, rounds)):
+                batch = {k: jnp.asarray(v) for k, v in stacked.items()}
+                batch["denom"] = jnp.float32(denom)
+                fn = self._round_fn(rd.composition, rd.c_mult,
+                                    rd.offload_ratio, len(rd.wave_ids))
+                grads, metrics = fn(self.params, grads, batch)
+                losses.append(float(metrics["loss"]))
+            sched_stats = pipeline_schedule_stats(plan, self.rt.num_stages)
+            rec_extra = {"rounds": len(rounds),
+                         "bubble_frac_pipeline":
+                             sched_stats["bubble_frac_pipeline"]}
+        else:
+            for lw in self.loader.iter_step(self.step, plan):
+                batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
+                batch["denom"] = jnp.float32(denom)
+                fn = self._wave_fn(lw.composition, lw.c_mult,
+                                   lw.offload_ratio)
+                grads, metrics = fn(self.params, grads, batch)
+                losses.append(float(metrics["loss"]))
         self.params, self.opt_state, om = jax.jit(self.apply_step)(
             self.params, self.opt_state, grads)
         # straggler feedback: EMA of per-rank modeled times this step
@@ -145,7 +192,7 @@ class Trainer:
                "waves": len(plan.waves),
                "bubble_frac": plan.stats["bubble_frac"],
                "grad_norm": float(om["grad_norm"]),
-               "wall_s": time.time() - t0}
+               "wall_s": time.time() - t0, **rec_extra}
         self.history.append(rec)
         if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
             self.ckpt.save(self.step, self.params, self.opt_state,

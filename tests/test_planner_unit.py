@@ -1,12 +1,14 @@
 """Balance-scheduler specifics (Alg. 2) untested elsewhere: PP-Balance's
-round-robin bucket draw, rank_speed straggler weighting, and bucketize's
-equal-FLOPs split."""
+uniform stream, rank_speed straggler weighting, bucketize's equal-FLOPs
+split (incl. more buckets than units), and find_slot's c_mult-segregated
+wave growth."""
 import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.balance import bucketize
-from repro.core.hdp import build_units
-from repro.core.planner import PlanSpec, plan
+from repro.core.hdp import build_units, uniform_cp_width
+from repro.core.planner import PlanSpec, auto_cp_degree, plan
+from repro.parallel.pipeline import pipeline_rounds, pipeline_schedule_stats
 
 CFG = get_config("llama-7b")
 SPEC = PlanSpec.for_config(CFG, capacity=8192, hdp=4, use_offload=False)
@@ -16,30 +18,61 @@ SPEC = PlanSpec.for_config(CFG, capacity=8192, hdp=4, use_offload=False)
 BIMODAL = [8192] * 8 + [512] * (28 * 16)
 LONG_IDS = set(range(8))
 
+# true-long bimodal: sequences needing CP width 2 at capacity, so DP- and
+# PP-Balance genuinely diverge (DP: per-sequence widths; PP: one width)
+TRUE_LONG = [16384] * 12 + [512] * 600
+SPEC8 = SPEC.replace(hdp=8)
 
-def _waves_with_longs(p):
-    return [i for i, w in enumerate(p.waves)
-            if any(pc.seq_id in LONG_IDS for slot in w.slots for pc in slot)]
+
+def test_pp_mode_emits_uniform_stream():
+    """PP-Balance (Insight 1, SPMD adaptation): the whole step is planned
+    at one uniform CP width, so every wave shares a single (composition,
+    c_mult) key — the pipelined executor runs it as ONE round — while
+    DP-Balance's per-sequence widths fragment the stream into several
+    flush-paying rounds."""
+    dp = plan(TRUE_LONG, SPEC8.replace(mode="dp"))
+    pp = plan(TRUE_LONG, SPEC8.replace(mode="pp"))
+    pp_keys = {(tuple(w.composition), w.c_mult) for w in pp.waves}
+    assert len(pp_keys) == 1, pp_keys
+    width = pp.stats["pp_width"]
+    assert pp_keys == {((width,) * (SPEC8.hdp // width), 1)}
+    assert len(pipeline_rounds(pp)) == 1
+    assert len(pipeline_rounds(dp)) > 1          # dp mixes widths
 
 
-def test_pp_mode_draws_round_robin_across_buckets():
-    """DP-Balance drains the longest bucket first (longs confined to the
-    earliest waves); PP-Balance draws round-robin so the expensive units
-    spread across the wave stream (Insight 1: each pipeline's stream of
-    waves has uniform cost)."""
-    dp = plan(BIMODAL, SPEC.replace(mode="dp"))
-    pp = plan(BIMODAL, SPEC.replace(mode="pp"))
-    dp_longs, pp_longs = _waves_with_longs(dp), _waves_with_longs(pp)
-    # dp: all 8 longs fit in the first ceil(8/hdp)=2 waves
-    assert max(dp_longs) <= 1, dp_longs
-    # pp: interleaved with short buckets -> longs reach later waves
-    assert max(pp_longs) > max(dp_longs), (dp_longs, pp_longs)
-    # and pp's first wave mixes both classes while dp's is long-only
-    def wave0_classes(p):
-        return {pc.seq_id in LONG_IDS
-                for slot in p.waves[0].slots for pc in slot}
-    assert wave0_classes(dp) == {True}
-    assert wave0_classes(pp) == {True, False}
+def test_pp_mode_beats_dp_under_pipelined_executor():
+    """The acceptance claim of the pipeline subsystem: on a bimodal mix
+    the PP-Balance stream has a strictly lower lockstep bubble fraction
+    than DP-Balance under the pipelined executor, at every depth."""
+    dp = plan(TRUE_LONG, SPEC8.replace(mode="dp"))
+    pp = plan(TRUE_LONG, SPEC8.replace(mode="pp"))
+    for s in (2, 4):
+        b_dp = pipeline_schedule_stats(dp, s)["bubble_frac_pipeline"]
+        b_pp = pipeline_schedule_stats(pp, s)["bubble_frac_pipeline"]
+        assert b_pp < b_dp, (s, b_pp, b_dp)
+    # and the plain per-rank balance objective does not regress much
+    assert pp.stats["makespan"] <= dp.stats["makespan"] * 1.10
+
+
+def test_uniform_cp_width_divides_hdp():
+    assert uniform_cp_width([8 * 8192], 8192, 12) == 12   # 8 ∤ 12 -> 12
+    assert uniform_cp_width([3 * 8192], 8192, 12) == 3
+    assert uniform_cp_width([3 * 8192], 8192, 16) == 4    # pow2 unchanged
+    assert uniform_cp_width([], 8192, 16) == 1
+
+
+def test_auto_cp_degree_always_divides_hdp():
+    """Regression: a non-pow2 hdp used to get cp = next-pow2 which could
+    exceed the largest pow2 divisor (hdp=12, 8·capacity seq -> cp=8,
+    12/8 non-integral DP groups)."""
+    for hdp in (4, 6, 8, 12, 16, 24, 48):
+        for longest_mult in (1, 2, 3, 5, 8, 100):
+            cp = auto_cp_degree([longest_mult * 8192], 8192, hdp)
+            assert hdp % cp == 0, (hdp, longest_mult, cp)
+    # the documented static geometry now holds for the old failing case
+    p = plan([8 * 8192] + [512] * 64,
+             SPEC.replace(hdp=12, strategy="static"))
+    assert p.stats["cp_degree"] == 12
 
 
 def test_rank_speed_straggler_gets_measurably_less_work():
@@ -78,3 +111,41 @@ def test_bucketize_splits_flops_equally_within_tolerance():
         first = buckets[0][0].cost_per_rank * buckets[0][0].ranks
         last = buckets[-1][-1].cost_per_rank * buckets[-1][-1].ranks
         assert first >= last
+
+
+def test_bucketize_more_buckets_than_units():
+    """n_buckets > len(units): every unit lands in its own bucket, nothing
+    is dropped, and no empty buckets appear in the middle of the list."""
+    units = build_units([8192, 4096, 512], 8192, 4, SPEC.coeffs,
+                        num_layers=CFG.num_layers, use_offload=False)
+    n_units = len(units)
+    buckets = bucketize(units, n_buckets=8)
+    assert sum(len(b) for b in buckets) == n_units
+    assert len(buckets) <= 8
+    assert all(b for b in buckets), "no empty buckets"
+    # still sorted: costliest unit first
+    flat = [u for b in buckets for u in b]
+    costs = [u.cost_per_rank for u in flat]
+    assert costs == sorted(costs, reverse=True)
+    # degenerate: empty unit list stays a single (empty) bucket
+    assert bucketize([], 8) == [[]]
+
+
+def test_find_slot_cmult_mismatch_forces_wave_growth():
+    """Waves are homogeneous in buffer size: when c_mult-mismatched waves
+    force placement past existing waves, the plan grows new waves rather
+    than mixing buffer shapes (one SPMD shape per wave)."""
+    # one offloaded long sequence whose Eq. 3 width is below its natural
+    # width -> per-rank buffer spills past capacity (c_mult > 1), while
+    # the shorts pack into ordinary c_mult=1 waves
+    lengths = [6 * 8192] + [512] * (16 * 12)
+    p = plan(lengths, SPEC.replace(use_offload=True))
+    cmults = {w.c_mult for w in p.waves}
+    assert len(cmults) > 1, f"expected mixed buffer classes, got {cmults}"
+    for w in p.waves:
+        # homogeneous waves: every occupied slot fits its class exactly
+        for slot in w.slots:
+            assert sum(pc.length for pc in slot) <= p.capacity * w.c_mult
+    # both classes hold work (the big-buffer wave is not empty padding)
+    big = [w for w in p.waves if w.c_mult > 1]
+    assert any(any(slot for slot in w.slots) for w in big)
