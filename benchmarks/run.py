@@ -4,16 +4,40 @@ the benchmark unit; ``derived`` carries the figure's headline quantity.
 
 Also emits ``BENCH_planner.json`` — a per-PR planner performance snapshot
 (makespan, bubble fractions, pipelined-executor bubble and planner
-wall-time on a fixed bimodal batch) so the repo's perf trajectory is
-recorded in-tree.
+wall-time on a fixed bimodal batch) — and ``BENCH_kernels.json`` — the
+kernel-throughput snapshot (local + ring attention tokens/s, Pallas
+interpret vs jnp oracle; see benchmarks/kernel_bench.py) — so the repo's
+perf trajectory is recorded in-tree.
 """
 from __future__ import annotations
 
 import json
+import subprocess
 import sys
 import time
 
 SNAPSHOT_PATH = "BENCH_planner.json"
+KERNEL_SNAPSHOT_PATH = "BENCH_kernels.json"
+
+
+def kernels_snapshot(path: str = KERNEL_SNAPSHOT_PATH) -> list:
+    """Kernel-throughput snapshot, in a subprocess: the ring sweep needs a
+    multi-device host platform, which must be forced before jax
+    initializes (benchmarks/kernel_bench.py re-execs itself with
+    ``--xla_force_host_platform_device_count`` when needed).  Returns the
+    child's benchmark rows so `main` can fold them into its CSV instead
+    of timing the kernels a second time in-process."""
+    r = subprocess.run([sys.executable, "-m", "benchmarks.kernel_bench",
+                       "--ring", "--out", path],
+                       capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-500:])
+    rows = []
+    for line in r.stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0] != "name":
+            rows.append((parts[0], float(parts[1]), parts[2]))
+    return rows
 
 
 def planner_snapshot(path: str = SNAPSHOT_PATH) -> dict:
@@ -61,11 +85,12 @@ def planner_snapshot(path: str = SNAPSHOT_PATH) -> dict:
 
 def main() -> None:
     from benchmarks import (ablation, case_study, data_dist, end_to_end,
-                            flops_imbalance, kernel_bench, offload_sweep,
-                            pipeline_bubble)
+                            flops_imbalance, offload_sweep, pipeline_bubble)
     rows = []
+    # kernel_bench runs once, inside the kernels_snapshot subprocess (the
+    # ring sweep needs forced host devices); its rows fold into the CSV
     for mod in (data_dist, flops_imbalance, end_to_end, case_study,
-                ablation, offload_sweep, pipeline_bubble, kernel_bench):
+                ablation, offload_sweep, pipeline_bubble):
         t0 = time.perf_counter()
         try:
             rows.extend(mod.run())
@@ -77,6 +102,14 @@ def main() -> None:
         sys.stderr.write(f"[planner_snapshot] -> {SNAPSHOT_PATH}\n")
     except Exception as e:
         sys.stderr.write(f"[planner_snapshot] FAILED: {e!r}\n")
+    t0 = time.perf_counter()
+    try:
+        rows.extend(kernels_snapshot())
+        sys.stderr.write(f"[kernels_snapshot] -> {KERNEL_SNAPSHOT_PATH} "
+                         f"{time.perf_counter()-t0:.1f}s\n")
+    except Exception as e:
+        rows.append(("benchmarks.kernel_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[kernels_snapshot] FAILED: {e!r}\n")
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -93,15 +93,28 @@ def solve_eq3(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
     ell = max(num_layers, 3)
     if s <= capacity:
         return 0.0, 1
-    r = max_overlap_ratio(c, s, hw)
-    # paper's upper bound: no point offloading below D(s)=1 territory
-    r_cap = min(1.0, ell * act_bytes(c, capacity)
-                / max((ell - 2) * act_bytes(c, s), 1e-9))
-    r = min(r, 1.0)
-    d = math.ceil((2 * act_bytes(c, s) + (1 - r) * (ell - 2) * act_bytes(c, s))
-                  / (ell * act_bytes(c, capacity)))
-    d_no_offload = math.ceil(act_bytes(c, s) / act_bytes(c, capacity))
-    del r_cap
+    act_s = act_bytes(c, s)
+    act_c = act_bytes(c, capacity)
+    r = min(max_overlap_ratio(c, s, hw), 1.0)
+    # Paper's upper bound on r, applied in its exact form.  The transcribed
+    # ``r_cap = l·Act(C)/((l-2)·Act(s))`` was dead code (computed, then
+    # del'd without clamping) — and applying it verbatim would be wrong:
+    # for s >> C it caps r at ~Act(C)/Act(s) ≈ 0, erasing the offload win
+    # of Fig. 11.  The bound's intent is "offloading past the point where
+    # D(s) stops shrinking is wasted transfer", so we cap r at the
+    # *saturation ratio*: the smallest r that already reaches the best
+    # achievable D (the D at full offload, where only the first/last
+    # layers' 2·Act(s) remain resident).  D(s) is unchanged at every s;
+    # only wasted D2H/H2D traffic is dropped.
+    d_best = max(1, math.ceil(2 * act_s / (ell * act_c)))
+    r_sat = max(0.0, 1.0 - (d_best * ell * act_c - 2 * act_s)
+                / max((ell - 2) * act_s, 1e-9))
+    if r_sat < r:
+        r, d = r_sat, d_best        # D(r_sat) == d_best by construction
+    else:
+        d = math.ceil((2 * act_s + (1 - r) * (ell - 2) * act_s)
+                      / (ell * act_c))
+    d_no_offload = math.ceil(act_s / act_c)
     return r, max(1, min(d, d_no_offload))
 
 

@@ -195,7 +195,8 @@ def ring_attention(q, k, v, q_seg, k_seg, q_pos, k_pos, *,
                    softcap: float = 0.0, kv_chunk: int = 1024,
                    block_skip: bool = True, attn_impl: str = "ref",
                    v_in_k: Optional[Tuple[int, int]] = None,
-                   unroll: bool = False):
+                   unroll: bool = False,
+                   block_q: int = 256, block_k: int = 512):
     """pjit-level entry point.
 
     Global shapes: q [T, h_pad, D] (heads sharded over `model_axis`),
@@ -205,6 +206,14 @@ def ring_attention(q, k, v, q_seg, k_seg, q_pos, k_pos, *,
     ``v_in_k=(offset, dv)`` declares that v is a slice of k (MLA latent:
     v = k[..., :512]); the ring then carries only k.  Otherwise k and v are
     fused into one carried tensor (same bytes, single collective).
+
+    ``attn_impl`` selects the per-step compute backend: ``"ref"`` runs the
+    jnp oracle ring (`_ring_attention_local`); ``"pallas"`` dispatches the
+    whole ring to the fused ring-flash engine (kernels/ring_flash.py) —
+    each step a state-carrying Pallas flash kernel with its own reverse
+    ring for the backward pass; ``block_q``/``block_k`` are its tile
+    shapes.  Both backends share the composition, ppermute schedule, and
+    block-skipping metadata, so they are numerically interchangeable.
     """
     tp = mesh.shape[model_axis] if model_axis else 1
     hpl = q.shape[1] // tp
@@ -222,18 +231,34 @@ def ring_attention(q, k, v, q_seg, k_seg, q_pos, k_pos, *,
     head_spec = P(hdp_axes, model_axis, None)
     kv_spec = P(hdp_axes, model_axis if kv_sharded else None, None)
 
+    if attn_impl == "pallas":
+        # lazy import: kernels/ring_flash imports this module's ring helpers
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.ring_flash import RingConfig
+        ring_cfg = RingConfig(
+            hdp_axes=hdp_axes, composition=composition, kv_split=kv_split,
+            gather=use_group_gather, scale=scale, causal=causal,
+            window=window, softcap=softcap, block_q=block_q,
+            block_k=block_k, block_skip=block_skip, unroll=unroll,
+            interpret=kernel_ops.INTERPRET)
+        ring_fn = kernel_ops.make_ring_flash(ring_cfg)
+
     def body(q_, kv_, qs_, ks_, qp_, kp_):
         if use_group_gather:
             m = jax.lax.axis_index(model_axis) if model_axis else 0
             kgi = jax.lax.dynamic_slice_in_dim(kv_group_of_head, m * hpl, hpl)
         else:
             kgi = None
+        if attn_impl == "pallas":
+            return ring_fn(q_, kv_, qs_, ks_, qp_, kp_,
+                           kgi if kgi is not None
+                           else jnp.zeros((1,), jnp.int32))
         return _ring_attention_local(
             q_, kv_, qs_, ks_, qp_, kp_,
             hdp_axes=hdp_axes, composition=composition, kv_split=kv_split,
             kv_group_index=kgi, scale=scale, causal=causal, window=window,
             softcap=softcap, kv_chunk=kv_chunk, block_skip=block_skip,
-            attn_impl=attn_impl, unroll=unroll)
+            attn_impl="ref", unroll=unroll)
 
     fn = shard_map(
         body, mesh=mesh,

@@ -54,17 +54,9 @@ def _scores(q, k, scale, softcap):
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
-                out_ref, lse_ref, acc_ref, m_ref, l_ref, *,
-                scale, causal, window, softcap, kv_blocks):
-    j = pl.program_id(3)
-
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-
+def _online_update(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                   acc_ref, m_ref, l_ref, *, scale, causal, window, softcap):
+    """Fold one (Bq × Bk) panel into the running (acc, m, l) scratch."""
     q = q_ref[0, 0]                                     # [Bq, Dk]
     k = k_ref[0]                                        # [Bk, Dk]
     v = v_ref[0]                                        # [Bk, Dv]
@@ -82,6 +74,22 @@ def _fwd_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
     acc_ref[...] = acc_ref[...] * alpha[:, None] \
         + jax.lax.dot(p.astype(v.dtype), v).astype(jnp.float32)
     m_ref[...] = m_cur
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                out_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+                scale, causal, window, softcap, kv_blocks):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    _online_update(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                   acc_ref, m_ref, l_ref, scale=scale, causal=causal,
+                   window=window, softcap=softcap)
 
     @pl.when(j == kv_blocks - 1)
     def _done():
@@ -136,6 +144,91 @@ def flash_attention_fwd(q, k, v, q_seg, k_seg, q_pos, k_pos, *, scale,
         interpret=interpret,
     )(q, k, v, q_seg, k_seg, q_pos, k_pos)
     return out, lse
+
+
+# ---------------------------------------------------------------------------
+# state-carrying forward (ring steps — kernels/ring_flash.py)
+# ---------------------------------------------------------------------------
+
+def _fwd_carry_kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                      acc_in_ref, m_in_ref, l_in_ref,
+                      acc_out_ref, m_out_ref, l_out_ref,
+                      acc_s, m_s, l_s, *,
+                      scale, causal, window, softcap, kv_blocks):
+    """Ring-step variant of ``_fwd_kernel``: instead of starting from empty
+    stats and emitting a normalized output, the online-softmax state
+    initializes from carry-in (acc, m, l) refs and the folded state is
+    emitted unnormalized — partial stats accumulate across the g visiting
+    KV blocks of a ring without a per-step renormalize/merge round-trip.
+    Finalization (out = acc/l, lse = m + log l) happens once after the
+    last ring step (kernels/ring_flash.py)."""
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = acc_in_ref[0, 0]
+        m_s[...] = m_in_ref[0, 0]
+        l_s[...] = l_in_ref[0, 0]
+
+    _online_update(q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,
+                   acc_s, m_s, l_s, scale=scale, causal=causal,
+                   window=window, softcap=softcap)
+
+    @pl.when(j == kv_blocks - 1)
+    def _done():
+        acc_out_ref[0, 0] = acc_s[...]
+        m_out_ref[0, 0] = m_s[...]
+        l_out_ref[0, 0] = l_s[...]
+
+
+def flash_attention_fwd_carry(q, k, v, q_seg, k_seg, q_pos, k_pos,
+                              acc, m, l, *, scale, causal=True, window=0,
+                              softcap=0.0, block_q=256, block_k=512,
+                              interpret=True):
+    """One ring step: fold one KV block into carried online-softmax state.
+
+    q [G, Hg, T, Dk]; k [G, S, Dk]; v [G, S, Dv];
+    acc [G, Hg, T, Dv] f32, m/l [G, Hg, T] f32 (carry-in) -> same (carry-out).
+    """
+    g, hg, t, dk = q.shape
+    s = k.shape[1]
+    dv = v.shape[-1]
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    assert t % block_q == 0 and s % block_k == 0
+    grid = (g, hg, t // block_q, s // block_k)
+
+    kernel = functools.partial(
+        _fwd_carry_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_blocks=s // block_k)
+    stat3 = pl.BlockSpec((1, 1, block_q), lambda g, h, i, j: (g, h, i))
+    stat4 = pl.BlockSpec((1, 1, block_q, dv), lambda g, h, i, j: (g, h, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dk), lambda g, h, i, j: (g, h, i, 0)),
+            pl.BlockSpec((1, block_k, dk), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda g, h, i, j: (g, j, 0)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+            pl.BlockSpec((block_q,), lambda g, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda g, h, i, j: (j,)),
+            stat4, stat3, stat3,
+        ],
+        out_specs=[stat4, stat3, stat3],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, hg, t, dv), jnp.float32),
+            jax.ShapeDtypeStruct((g, hg, t), jnp.float32),
+            jax.ShapeDtypeStruct((g, hg, t), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dv), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_seg, k_seg, q_pos, k_pos, acc, m, l)
 
 
 # ---------------------------------------------------------------------------

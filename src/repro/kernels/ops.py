@@ -78,6 +78,43 @@ def flash_attention_stats(q, k, v, q_seg, k_seg, q_pos, k_pos, *, scale,
 
 
 # ---------------------------------------------------------------------------
+# ring-flash attention (sharded CP path), differentiable
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_ring_flash(cfg):
+    """Custom-VJP wrapper around the ring-flash engine
+    (kernels/ring_flash.py) for one static ring configuration
+    (`ring_flash.RingConfig` — hashable, so each distinct composition ×
+    head-mode × mask-config builds exactly one differentiable callable,
+    mirroring the per-composition executable cache).
+
+    The returned function runs *inside* `core/ring.py`'s shard_map body:
+    ``fn(q [C, hpl, D], kv [C, G, Dk(+Dv)], q_seg, k_seg, q_pos, k_pos,
+    kgi) -> out [C, hpl, Dv]``.  Forward saves (out, lse) residuals; the
+    backward rule runs the reverse ring (per-step dq contributions + dkv
+    returned home) instead of differentiating through the Pallas calls.
+    """
+    from repro.kernels import ring_flash as RF
+
+    @jax.custom_vjp
+    def ring_flash(q, kv, q_seg, k_seg, q_pos, k_pos, kgi):
+        out, _ = RF.ring_flash_fwd(cfg, q, kv, q_seg, k_seg, q_pos, k_pos,
+                                   kgi)
+        return out
+
+    def _rf_fwd(q, kv, q_seg, k_seg, q_pos, k_pos, kgi):
+        return RF.ring_flash_fwd(cfg, q, kv, q_seg, k_seg, q_pos, k_pos, kgi)
+
+    def _rf_bwd(res, do):
+        dq, dkv = RF.ring_flash_bwd(cfg, res, do)
+        return dq, dkv, None, None, None, None, None
+
+    ring_flash.defvjp(_rf_fwd, _rf_bwd)
+    return ring_flash
+
+
+# ---------------------------------------------------------------------------
 # fused softmax cross-entropy, differentiable
 # ---------------------------------------------------------------------------
 

@@ -35,6 +35,13 @@ def main():
                     help="e.g. 16x16 or 2x16x16 (production)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--attn-impl", default=None, choices=["ref", "pallas"],
+                    help="attention backend: jnp oracle ring (ref) or the "
+                         "Pallas ring-flash engine (pallas; interpret-mode "
+                         "on CPU unless REPRO_PALLAS_COMPILE=1)")
+    ap.add_argument("--max-round-waves", type=int, default=0,
+                    help="pipelined executor: cap waves per round (0 = "
+                         "uncapped) to bound in-flight activation memory")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,7 +71,9 @@ def main():
                       AdamWConfig(lr=args.lr, total_steps=args.steps),
                       sched, TrainerConfig(capacity=args.capacity,
                                            ckpt_dir=args.ckpt_dir,
-                                           strategy=args.strategy))
+                                           strategy=args.strategy,
+                                           attn_impl=args.attn_impl,
+                                           max_round_waves=args.max_round_waves))
     if args.ckpt_dir and trainer.resume_if_possible():
         print(f"resumed at step {trainer.step}")
     for rec in trainer.run(args.steps - trainer.step):

@@ -160,7 +160,8 @@ def _attention_block(bp, cfg: ModelConfig, rt: Runtime, x, seg, pos,
             scale=MLA.mla_scale(cfg), window=window,
             softcap=cfg.attn_softcap, kv_chunk=rt.kv_chunk,
             block_skip=rt.block_skip, attn_impl=rt.attn_impl,
-            v_in_k=(0, cfg.mla.kv_lora_rank), unroll=rt.cost_unroll)
+            v_in_k=(0, cfg.mla.kv_lora_rank), unroll=rt.cost_unroll,
+            block_q=rt.attn_block_q, block_k=rt.attn_block_k)
         out = out[:, :cfg.num_heads]                     # drop padded heads
         return MLA.mla_output(bp, cfg, out)
 
@@ -181,7 +182,8 @@ def _attention_block(bp, cfg: ModelConfig, rt: Runtime, x, seg, pos,
                           else layout.group_of_head()),
         scale=dk ** -0.5, window=window, softcap=cfg.attn_softcap,
         kv_chunk=rt.kv_chunk, block_skip=rt.block_skip,
-        attn_impl=rt.attn_impl, unroll=rt.cost_unroll)
+        attn_impl=rt.attn_impl, unroll=rt.cost_unroll,
+        block_q=rt.attn_block_q, block_k=rt.attn_block_k)
     if layout.pad_heads:
         out = out * layout.head_mask()[None, :, None].astype(out.dtype)
     return out.reshape(t, -1) @ bp["w_o"]

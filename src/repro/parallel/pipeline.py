@@ -212,12 +212,20 @@ def round_key(wave) -> Tuple:
             round(wave.offload_ratio, 2))
 
 
-def pipeline_rounds(plan: StepPlan) -> List[Round]:
+def pipeline_rounds(plan: StepPlan, max_waves: int = 0) -> List[Round]:
     """Group a plan's wave queue by (composition, c_mult, offload) into
     pipelined rounds.  Grouping is global (not merely contiguous): waves
     commute under the token-level loss, so reordering the queue is free,
     and maximal rounds minimize pipeline flushes.  Round order follows
-    first appearance, wave order within a round follows the stream."""
+    first appearance, wave order within a round follows the stream.
+
+    ``max_waves > 0`` caps the round length (ROADMAP PP follow-up): a
+    round of M waves keeps M microbatches' activations in flight through
+    the stage buffer, so very long rounds trade the flush they amortize
+    for unbounded activation memory.  Capping splits each group into
+    ceil(M / max_waves) chunks — each chunk pays its own S-1 fill/drain
+    flush, bounding in-flight activations at ``max_waves`` microbatches.
+    """
     order: List[Tuple] = []
     groups: Dict[Tuple, List[int]] = {}
     for i, w in enumerate(plan.waves):
@@ -230,14 +238,19 @@ def pipeline_rounds(plan: StepPlan) -> List[Round]:
     for k in order:
         ids = groups[k]
         w0 = plan.waves[ids[0]]
-        out.append(Round(wave_ids=ids, composition=tuple(w0.composition),
-                         c_mult=w0.c_mult,
-                         offload_ratio=max(plan.waves[i].offload_ratio
-                                           for i in ids)))
+        chunk = max_waves if max_waves > 0 else len(ids)
+        for a in range(0, len(ids), chunk):
+            sub = ids[a:a + chunk]
+            out.append(Round(wave_ids=sub,
+                             composition=tuple(w0.composition),
+                             c_mult=w0.c_mult,
+                             offload_ratio=max(plan.waves[i].offload_ratio
+                                               for i in sub)))
     return out
 
 
-def pipeline_schedule_stats(plan: StepPlan, num_stages: int) -> Dict:
+def pipeline_schedule_stats(plan: StepPlan, num_stages: int,
+                            max_round_waves: int = 0) -> Dict:
     """Analytic lockstep schedule of the pipelined executor.
 
     Within a round of M waves the wavefront advances one microbatch per
@@ -249,7 +262,7 @@ def pipeline_schedule_stats(plan: StepPlan, num_stages: int) -> Dict:
     a round's window, and per-round flushes — the quantity PP-Balance's
     uniform stream minimizes (paper Insight 1)."""
     S = max(1, num_stages)
-    rounds = pipeline_rounds(plan)
+    rounds = pipeline_rounds(plan, max_round_waves)
     makespan = 0.0
     peak = 0.0
     for rd in rounds:

@@ -36,7 +36,10 @@ class Runtime:
     model_axis: Optional[str] = "model"
     stage_axis: Optional[str] = None  # pipeline axis (parallel/pipeline.py)
     composition: Tuple[int, ...] = (1,)
-    attn_impl: str = "ref"            # ref | pallas
+    attn_impl: str = "ref"            # ref (jnp oracle ring) | pallas
+                                      # (fused ring-flash engine)
+    attn_block_q: int = 256           # Pallas flash tile shapes (clamped to
+    attn_block_k: int = 512           # the local chunk when it is smaller)
     remat: str = "full"               # none | full | offload
     offload_periods: int = 0          # leading layer-periods whose residuals offload
     kv_chunk: int = 1024

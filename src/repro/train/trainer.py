@@ -55,6 +55,13 @@ class TrainerConfig:
                                      # backend lacks a host memory space —
                                      # compat.offload_supported())
     straggler_ema: float = 0.5
+    attn_impl: Optional[str] = None  # override Runtime.attn_impl per run:
+                                     # "ref" (jnp oracle) | "pallas"
+                                     # (ring-flash engine); None keeps the
+                                     # Runtime's setting
+    max_round_waves: int = 0         # pipelined executor: split rounds
+                                     # longer than this many waves (0 = no
+                                     # cap) to bound in-flight activations
 
 
 class Trainer:
@@ -93,9 +100,11 @@ class Trainer:
             scheduler.spec = scheduler.spec.replace(use_offload=False)
 
     def _wave_rt(self, composition, offload_ratio) -> Runtime:
+        import dataclasses as dc
         rt_wave = self.rt.with_composition(composition)
+        if self.tcfg.attn_impl is not None:
+            rt_wave = dc.replace(rt_wave, attn_impl=self.tcfg.attn_impl)
         if self.offload_ok and offload_ratio > 0:
-            import dataclasses as dc
             rt_wave = dc.replace(
                 rt_wave, remat="offload",
                 offload_periods=offload_periods(self.cfg, offload_ratio))
@@ -153,7 +162,7 @@ class Trainer:
             # pipelined executor: the wave queue runs as rounds of like
             # waves, each round one wavefront schedule (parallel/pipeline);
             # round r+1 materializes in the background while r executes
-            rounds = pipeline_rounds(plan)
+            rounds = pipeline_rounds(plan, self.tcfg.max_round_waves)
             for rd, stacked in zip(rounds, self.loader.iter_rounds(
                     self.step, plan, rounds)):
                 batch = {k: jnp.asarray(v) for k, v in stacked.items()}
@@ -162,7 +171,8 @@ class Trainer:
                                     rd.offload_ratio, len(rd.wave_ids))
                 grads, metrics = fn(self.params, grads, batch)
                 losses.append(float(metrics["loss"]))
-            sched_stats = pipeline_schedule_stats(plan, self.rt.num_stages)
+            sched_stats = pipeline_schedule_stats(
+                plan, self.rt.num_stages, self.tcfg.max_round_waves)
             rec_extra = {"rounds": len(rounds),
                          "bubble_frac_pipeline":
                              sched_stats["bubble_frac_pipeline"]}

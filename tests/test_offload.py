@@ -21,6 +21,45 @@ def test_solver_bounds(s, cap):
         assert d == 1 and r == 0.0
 
 
+def test_eq3_saturation_cap_binds_without_changing_d():
+    """Regression for the formerly-dead r upper bound: when overlap allows
+    full offload but D(s) already saturates at a smaller ratio, solve_eq3
+    must return the smallest ratio reaching that D — not r = 1."""
+    c = OF.CostCoeffs(a1=1.0, b1=0.0, g=0.0, a2=1.0, b2=0.0)
+    ell, cap, s = 10, 1000, 1500
+    # quadratic compute dwarfs the transfer: overlap does NOT bind here
+    assert OF.max_overlap_ratio(c, s, OF.OffloadHW()) == 1.0
+    r, d = OF.solve_eq3(c, s, cap, ell)
+    assert d == 1
+    # D(s)=1 is reached at r = 1 - (l·Act(C) - 2·Act(s))/((l-2)·Act(s))
+    assert r == pytest.approx(1.0 - (10 * 1000 - 2 * 1500) / (8 * 1500))
+    # the cap is free: full offload reaches the same D
+    d_full = math.ceil(2 * OF.act_bytes(c, s)
+                       / (ell * OF.act_bytes(c, cap)))
+    assert max(1, d_full) == d
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(1, 4_000_000), cap=st.sampled_from([4096, 8192, 16384]))
+def test_eq3_saturation_cap_never_changes_d(s, cap):
+    """The applied bound only trims wasted transfer: D(s) must equal what
+    the uncapped (overlap-only) ratio would have produced."""
+    r, d = OF.solve_eq3(COEFFS, s, cap, CFG.num_layers)
+    if s <= cap:
+        assert (r, d) == (0.0, 1)
+        return
+    ell = max(CFG.num_layers, 3)
+    act_s, act_c = OF.act_bytes(COEFFS, s), OF.act_bytes(COEFFS, cap)
+    r_un = min(1.0, OF.max_overlap_ratio(COEFFS, s, OF.OffloadHW()))
+    d_un = math.ceil((2 * act_s + (1 - r_un) * (ell - 2) * act_s)
+                     / (ell * act_c))
+    d_naive = math.ceil(act_s / act_c)
+    d_best = math.ceil(2 * act_s / (ell * act_c))     # D at full offload
+    # never worse than the uncapped solve, never better than full offload
+    assert max(1, min(d_best, d_naive)) <= d <= max(1, min(d_un, d_naive))
+    assert r <= r_un + 1e-12
+
+
 def test_offload_shrinks_ranks_for_long_sequences():
     _, d_no = OF.solve_eq3(COEFFS, 2_000_000, 8192, CFG.num_layers)
     d_naive = math.ceil(2_000_000 / 8192)

@@ -48,6 +48,28 @@ def test_pipeline_rounds_groups_globally_by_key():
     assert round_key(_wave((2, 2), offload=0.5)) != round_key(_wave((2, 2)))
 
 
+def test_pipeline_rounds_max_waves_chunks_long_rounds():
+    """Round-size capping (ROADMAP PP follow-up): rounds longer than
+    max_waves split into chunks, bounding in-flight activation memory at
+    max_waves microbatches per flush."""
+    waves = [_wave((2, 2)) for _ in range(7)] + [_wave((4,))] * 2
+    p = StepPlan(waves=waves, denom=1, capacity=8192)
+    rounds = pipeline_rounds(p, max_waves=3)
+    assert [r.wave_ids for r in rounds] == [[0, 1, 2], [3, 4, 5], [6],
+                                            [7, 8]]
+    assert all(len(r.wave_ids) <= 3 for r in rounds)
+    assert all(r.composition == (2, 2) for r in rounds[:3])
+    assert rounds[3].composition == (4,)
+    # uncapped (default) behaviour unchanged
+    assert [r.wave_ids for r in pipeline_rounds(p)] == \
+        [[0, 1, 2, 3, 4, 5, 6], [7, 8]]
+    # capping can only add flushes: the pipelined makespan never improves
+    s_un = pipeline_schedule_stats(p, num_stages=4)
+    s_cap = pipeline_schedule_stats(p, num_stages=4, max_round_waves=3)
+    assert s_cap["makespan_pipeline"] >= s_un["makespan_pipeline"]
+    assert s_cap["n_rounds"] == 4 and s_un["n_rounds"] == 2
+
+
 def test_pipeline_schedule_stats_reduces_to_lockstep_at_one_stage():
     lengths = [16384] * 6 + [512] * 300
     p = plan(lengths, SPEC)
