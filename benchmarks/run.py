@@ -4,7 +4,10 @@ the benchmark unit; ``derived`` carries the figure's headline quantity.
 
 Also emits ``BENCH_planner.json`` — a per-PR planner performance snapshot
 (makespan, bubble fractions, pipelined-executor bubble and planner
-wall-time on a fixed bimodal batch) — and ``BENCH_kernels.json`` — the
+wall-time on a fixed bimodal batch) — ``BENCH_scheduler.json`` — the
+lookahead-scheduler snapshot (per-step vs window planning: window
+makespan, distinct compile keys, plan latency; see
+benchmarks/scheduler_bench.py) — and ``BENCH_kernels.json`` — the
 kernel-throughput snapshot (local + ring attention tokens/s, Pallas
 interpret vs jnp oracle; see benchmarks/kernel_bench.py) — so the repo's
 perf trajectory is recorded in-tree.
@@ -102,6 +105,17 @@ def main() -> None:
         sys.stderr.write(f"[planner_snapshot] -> {SNAPSHOT_PATH}\n")
     except Exception as e:
         sys.stderr.write(f"[planner_snapshot] FAILED: {e!r}\n")
+    try:
+        from benchmarks import scheduler_bench
+        cases = {mix: scheduler_bench.run_case(mix)
+                 for mix in scheduler_bench.MIXES}       # computed once:
+        rows.extend(scheduler_bench.rows_from(cases))    # CSV rows and
+        scheduler_bench.snapshot(cases=cases)            # snapshot share it
+        sys.stderr.write(
+            f"[scheduler_snapshot] -> {scheduler_bench.SNAPSHOT_PATH}\n")
+    except Exception as e:
+        rows.append(("benchmarks.scheduler_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[scheduler_snapshot] FAILED: {e!r}\n")
     t0 = time.perf_counter()
     try:
         rows.extend(kernels_snapshot())

@@ -58,22 +58,59 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
                  mode: str = "dp", delta: Optional[float] = None,
                  n_buckets: int = 8, use_offload: bool = True,
                  quadratic: bool = True, zigzag: bool = True,
-                 comm=None, rank_speed=None) -> StepPlan:
+                 comm=None, rank_speed=None,
+                 pp_width: Optional[int] = None,
+                 num_stages: int = 1,
+                 n_periods: Optional[int] = None,
+                 snap_widths: bool = False) -> StepPlan:
     """ByteScale Alg. 2.  mode: "dp" (DP-Balance) | "pp" (PP-Balance).
 
     ``rank_speed`` [hdp]: relative throughput per rank (straggler
     mitigation — slower ranks accumulate virtual time faster and receive
-    proportionally less work)."""
-    pp_width = None
+    proportionally less work).
+
+    ``pp_width``: force PP-Balance's uniform CP width instead of deriving
+    it from this batch alone — the lookahead scheduler (sched/lookahead.py)
+    sizes one width for a whole window of steps so every step shares one
+    pipelined executable."""
+    pp_offload_r = 0.0
+    if mode != "pp":
+        pp_width = None                # the knob only exists for PP-Balance
     if mode == "pp":
         # uniform stream (see module docstring): one CP width for every
         # unit, so all waves share one composition and the pipelined
-        # executor runs the step as a single round.  Offload planning is
-        # width-coupled (Eq. 3 trades D against r), so the uniform-width
-        # stream plans without it — recorded in plan.stats["use_offload"]
-        # below; co-planning offload with the uniform width is a ROADMAP
-        # follow-up.
-        pp_width = uniform_cp_width(lengths, capacity, hdp)
+        # executor runs the step as a single round.
+        pp_width = pp_width or uniform_cp_width(lengths, capacity, hdp)
+        if use_offload and lengths:
+            # PP × offload co-plan: the width is fixed by stream
+            # uniformity, so offload's remaining job is making that width
+            # activation-feasible for the longest sequence (Eq. 3
+            # inverted at D = pp_width), with the ratio quantized so the
+            # stage-sharded offload windows tile the global window
+            # exactly (core/offload.quantize_stage_ratio).
+            longest = max(lengths)
+            if longest > capacity * pp_width:
+                r_need = OF.ratio_for_d(coeffs, longest, capacity,
+                                        num_layers, pp_width,
+                                        quadratic=quadratic)
+                if r_need is None:
+                    # the uniform width is memory-infeasible even at full
+                    # offload (or the transfer can't hide): offload the
+                    # most that still hides under compute rather than
+                    # silently planning zero offload — buffer memory is
+                    # already covered by c_mult spill, this relieves
+                    # activation pressure as far as Eq. 3 allows
+                    r_need = OF.max_overlap_ratio(coeffs, longest,
+                                                  OF.OffloadHW())
+                if n_periods:
+                    pp_offload_r = OF.quantize_stage_ratio(
+                        r_need or 0.0, n_periods, max(num_stages, 1))
+                else:
+                    # no period grid known (caller bypassed
+                    # PlanSpec.for_config): use the raw ratio — wrong-grid
+                    # quantization would silently void the exact
+                    # stage-tiling guarantee instead of approximating it
+                    pp_offload_r = min(1.0, r_need or 0.0)
         units = build_units(lengths, capacity, hdp, coeffs,
                             num_layers=num_layers, use_offload=False,
                             quadratic=quadratic, zigzag=zigzag, comm=comm,
@@ -82,7 +119,7 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
         units = build_units(lengths, capacity, hdp, coeffs,
                             num_layers=num_layers, use_offload=use_offload,
                             quadratic=quadratic, zigzag=zigzag, comm=comm,
-                            balance_d=True)
+                            balance_d=True, snap_widths=snap_widths)
     buckets = bucketize(units, n_buckets)
     if delta is None:
         costs = [u.cost_per_rank for u in units] or [0.0]
@@ -157,16 +194,20 @@ def balance_plan(lengths: Sequence[int], *, capacity: int, hdp: int,
     if pp_width is not None:
         # uniform stream: every wave carries the same tiled composition;
         # unoccupied tiles are all-padding groups (block skipping turns
-        # their ring steps into no-ops), so one executable covers the step
+        # their ring steps into no-ops), so one executable covers the step.
+        # The co-planned offload ratio is wave-uniform too — one
+        # (composition, c_mult, offload) key for the whole step.
         for wave in waves:
             wave.composition = (pp_width,) * (hdp // pp_width)
+            wave.offload_ratio = max(wave.offload_ratio, pp_offload_r)
         denom = int(sum(lengths))
         plan = StepPlan(waves=waves, denom=denom, capacity=capacity)
         plan.stats = plan_stats(plan)
         plan.stats["mode"] = mode
         plan.stats["delta"] = delta
         plan.stats["pp_width"] = pp_width
-        plan.stats["use_offload"] = False   # pp overrides the request
+        plan.stats["pp_offload_ratio"] = pp_offload_r
+        plan.stats["use_offload"] = bool(use_offload and pp_offload_r > 0)
         return plan
 
     for w, wave in enumerate(waves):

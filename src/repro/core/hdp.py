@@ -129,9 +129,18 @@ def uniform_cp_width(lengths: Sequence[int], capacity: int, hdp: int) -> int:
     via c_mult instead).  Shared by the static baseline's auto CP degree and
     PP-Balance's uniform stream width."""
     need = max(1, -(-max(lengths, default=0) // capacity))
-    for g in range(min(need, hdp), hdp + 1):
-        if hdp % g == 0:
-            return g
+    return snap_width(need, hdp)
+
+
+def snap_width(g: int, hdp: int) -> int:
+    """Round a group width UP to the smallest divisor of the HDP axis ≥ g
+    (full axis if none).  Always feasible (more ranks never hurt memory);
+    the lookahead scheduler snaps balance widths onto this grid so long
+    sequences of different lengths land on a handful of compositions
+    instead of one per width — compile-reuse-aware group sizing."""
+    for w in range(min(max(g, 1), hdp), hdp + 1):
+        if hdp % w == 0:
+            return w
     return hdp
 
 
@@ -149,7 +158,8 @@ def build_units(lengths: Sequence[int], capacity: int, hdp: int,
                 use_offload: bool = True, quadratic: bool = True,
                 zigzag: bool = True, comm: Optional[CommModel] = None,
                 static_cp: Optional[int] = None,
-                balance_d: bool = False) -> List[Unit]:
+                balance_d: bool = False,
+                snap_widths: bool = False) -> List[Unit]:
     """``static_cp``: force every unit onto `static_cp` ranks — the
     paper's baseline (fixed CP degree sized for the longest sequence).
 
@@ -157,7 +167,12 @@ def build_units(lengths: Sequence[int], capacity: int, hdp: int,
     floor (min ranks, max offload) and ceil(len/C) so that its per-rank
     compute stays near the batch-average load — the balance scheduler's
     view of C2+C3 together; Alg. 1 (naive) keeps the Eq. 3 minimum and
-    exhibits the Fig. 18(b) imbalance."""
+    exhibits the Fig. 18(b) imbalance.
+
+    ``snap_widths``: round long-sequence group sizes UP onto the divisor
+    grid of the HDP axis (`snap_width`) — compile-reuse-aware sizing for
+    the lookahead scheduler: a few canonical widths instead of one per
+    length, at the cost of slightly more ranks per long sequence."""
     total_t = sum(seq_flops_time(ln, coeffs, num_layers) for ln in lengths)
     target = total_t / max(hdp, 1)
     units: List[Unit] = []
@@ -199,6 +214,16 @@ def build_units(lengths: Sequence[int], capacity: int, hdp: int,
         else:
             r, g = 0.0, math.ceil(ln / capacity)
         g = min(max(g, 1), hdp)
+        if snap_widths and g_forced is None:
+            g_snap = snap_width(g, hdp)
+            if g_snap != g:
+                g = g_snap
+                # more ranks than Eq. 3 asked for: the offload ratio the
+                # narrower width needed is wasted transfer at this one —
+                # recompute the minimum for the snapped width
+                r = (OF.ratio_for_d(coeffs, ln, capacity, num_layers, g,
+                                    quadratic=quadratic) or 0.0) \
+                    if (use_offload and r > 0) else 0.0
         pieces: List[List[Piece]] = [[] for _ in range(g)]
         if zigzag and quadratic:
             for j, lo, hi in zigzag_chunks(ln, g):

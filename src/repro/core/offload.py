@@ -142,9 +142,55 @@ def ratio_for_d(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
     return r
 
 
-def offload_periods(cfg: ModelConfig, r: float) -> int:
-    """Map a token-level ratio to layer periods whose residuals offload."""
+def scan_periods(cfg: ModelConfig) -> int:
+    """Number of scanned layer periods (the unit the offload window counts
+    in — matches parallel/pipeline.num_scan_periods)."""
     period = len(cfg.layer_pattern)
     head_n = cfg.moe.first_k_dense if cfg.moe else 0
-    n_periods = (cfg.num_layers - head_n) // period
+    return (cfg.num_layers - head_n) // period
+
+
+def offload_periods(cfg: ModelConfig, r: float, num_stages: int = 1) -> int:
+    """Map a token-level ratio to layer periods whose residuals offload.
+
+    ``num_stages > 1`` (pipeline parallelism): the executor's stage vmap is
+    SPMD — every stage runs one program, so the static offload count is
+    necessarily *per stage*.  The old global count applied per stage
+    offloaded up to ``num_stages×`` the planned fraction (each stage took
+    the full global window out of its own slice); the stage-aware count is
+    sized against the stage's local period window instead, so the union
+    over stages matches the planned global ratio."""
+    n_periods = scan_periods(cfg)
+    if num_stages > 1:
+        n_periods //= num_stages
     return int(round(r * n_periods))
+
+
+def stage_offload_windows(cfg: ModelConfig, r: float,
+                          num_stages: int) -> list:
+    """The global leading offload window [0, round(r·n)) split at stage
+    boundaries: stage s's share is the overlap with its period span
+    [s·n/S, (s+1)·n/S).  The windows are disjoint and contiguous and tile
+    the global window exactly — the planner's stage-aware view (and the
+    layout an interleaved/virtual-stage schedule would execute directly;
+    the current SPMD wavefront realizes the same per-stage *counts* as its
+    leading local periods — see `offload_periods`)."""
+    n = scan_periods(cfg)
+    n_local = n // max(num_stages, 1)
+    k = int(round(r * n))
+    return [(s * n_local, max(s * n_local, min(k, (s + 1) * n_local)))
+            for s in range(num_stages)]
+
+
+def quantize_stage_ratio(r: float, n_periods: int, num_stages: int) -> float:
+    """Smallest ratio ≥ r whose global offload-period count is a multiple
+    of ``num_stages`` — with it, the uniform per-stage counts
+    (`offload_periods(cfg, r, num_stages)`) sum to the global count
+    exactly, so PP-Balance can co-plan one ratio for its uniform-width
+    stream without per-stage drift."""
+    if r <= 0.0 or n_periods <= 0:
+        return 0.0
+    if num_stages <= 1:
+        return min(1.0, r)
+    k_local = math.ceil(r * n_periods / num_stages - 1e-9)
+    return min(1.0, k_local * num_stages / n_periods)

@@ -45,6 +45,13 @@ class PlanSpec:
     num_stages  pipeline depth the plan will execute on (stamped into
                 plan.stats so the executor layer can match plan ↔ schedule;
                 mode="pp" is the intended pairing when > 1)
+    pp_width    force PP-Balance's uniform CP width (the lookahead window
+                planner sizes one width for a whole window of steps)
+    n_periods   scanned layer periods of the model (offload-window grid for
+                the PP × offload co-plan; derived by `for_config`)
+    snap_widths DP-Balance: round long-sequence group widths UP onto the
+                HDP divisor grid (compile-reuse-aware sizing — the
+                lookahead scheduler turns this on)
     """
     capacity: int
     hdp: int
@@ -60,6 +67,9 @@ class PlanSpec:
     comm: Optional[CommModel] = None
     rank_speed: Optional[np.ndarray] = None
     cp_degree: Optional[int] = None
+    pp_width: Optional[int] = None
+    n_periods: Optional[int] = None
+    snap_widths: bool = False
     n_buckets: int = 8
     delta: Optional[float] = None
 
@@ -77,7 +87,8 @@ class PlanSpec:
         kw = dict(capacity=capacity, hdp=hdp, coeffs=coeffs,
                   num_layers=cfg.num_layers, comm=CommModel(**comm_kw),
                   quadratic=not cfg.attention_free,
-                  zigzag=not cfg.attention_free)
+                  zigzag=not cfg.attention_free,
+                  n_periods=OF.scan_periods(cfg))
         kw.update(overrides)        # explicit overrides win over derived
         return cls(**kw)
 
@@ -115,7 +126,10 @@ def plan(lengths: Sequence[int], spec: PlanSpec) -> StepPlan:
             else np.asarray(spec.rank_speed, dtype=float)
         p = balance_plan(lengths, mode=spec.mode,
                          use_offload=spec.use_offload, rank_speed=speed,
-                         n_buckets=spec.n_buckets, delta=spec.delta, **kw)
+                         n_buckets=spec.n_buckets, delta=spec.delta,
+                         pp_width=spec.pp_width, num_stages=spec.num_stages,
+                         n_periods=spec.n_periods,
+                         snap_widths=spec.snap_widths, **kw)
     else:
         raise ValueError(
             f"unknown strategy {spec.strategy!r}; expected one of "
@@ -124,3 +138,17 @@ def plan(lengths: Sequence[int], spec: PlanSpec) -> StepPlan:
     p.stats["num_stages"] = spec.num_stages
     validate_plan(p, lengths)
     return p
+
+
+def plan_window(window_lengths: Sequence[Sequence[int]], spec: PlanSpec,
+                **kw) -> "list[StepPlan]":
+    """Jointly plan a lookahead window of K global batches (one length
+    list per step) — the multi-batch entry point.  Per-step token cover
+    and Eq. 2 denominators are identical to calling `plan` per step; the
+    window planner only co-decides *layout*: shared composition templates
+    (compile-cache reuse), cross-step rank leveling, one PP width and
+    stage-tiling offload ratios for the whole window.  Implemented in
+    `repro.sched.lookahead`; every returned plan is validate_plan-checked.
+    """
+    from repro.sched.lookahead import plan_window as _plan_window
+    return _plan_window(window_lengths, spec, **kw)

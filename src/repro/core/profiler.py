@@ -43,6 +43,21 @@ def fit_time_coeffs(lengths: Sequence[int], seconds: Sequence[float],
                       g=max(float(g), 0.0), a2=float(act_per_token), b2=0.0)
 
 
+def blend_coeffs(base: CostCoeffs, fitted: CostCoeffs,
+                 blend: float = 0.5) -> CostCoeffs:
+    """Convex blend of two coefficient sets (blend=1 → fully fitted).
+
+    The online calibrator (sched/calibrate.py) refits T(s) from a sliding
+    window of measured wave times; blending toward the previous
+    coefficients keeps one noisy window from capsizing every plan in the
+    lookahead buffer.  Act(s) is a byte count, not a timing — it stays at
+    the base's value."""
+    b = min(max(float(blend), 0.0), 1.0)
+    mix = lambda x, y: (1.0 - b) * x + b * y
+    return CostCoeffs(a1=mix(base.a1, fitted.a1), b1=mix(base.b1, fitted.b1),
+                      g=mix(base.g, fitted.g), a2=base.a2, b2=base.b2)
+
+
 def profile_model(cfg: ModelConfig, rt, lengths: Sequence[int],
                   iters: int = 2) -> CostCoeffs:
     """Time real jitted forwards at several sequence lengths and fit."""

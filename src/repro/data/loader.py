@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.hdp import StepPlan, Wave
-from repro.core.planner import PlanSpec, plan as plan_batch
+from repro.core.planner import PlanSpec
 from repro.data.distribution import DISTRIBUTIONS, LengthDistribution
 
 
@@ -66,21 +66,44 @@ class LoadedWave:
 
 
 class GlobalScheduler:
-    """The single controller: metadata in, (plan, buffers) out.  All plan
-    construction goes through `repro.core.planner.plan` — this class only
-    owns the PlanSpec and the live straggler weights."""
+    """The single controller: metadata in, (plan, buffers) out — a thin
+    facade over `repro.sched.service.SchedulerService`, which owns the
+    lookahead window, the composition-template registry, the async planner
+    thread and the live straggler weights.  All plan construction goes
+    through `repro.core.planner.plan_window`."""
 
     def __init__(self, dataset: SyntheticDataset, cfg: ModelConfig, *,
                  capacity: int, hdp: int, mode: str = "dp",
                  strategy: str = "balance", use_offload: bool = True,
                  num_stages: int = 1,
-                 rank_speed: Optional[np.ndarray] = None):
+                 rank_speed: Optional[np.ndarray] = None,
+                 lookahead: int = 1, sched_async: bool = False,
+                 plan_ahead: int = 2):
+        from repro.sched.service import SchedulerService
         self.ds = dataset
         self.cfg = cfg
-        self.spec = PlanSpec.for_config(
+        spec = PlanSpec.for_config(
             cfg, capacity=capacity, hdp=hdp, strategy=strategy, mode=mode,
             use_offload=use_offload, num_stages=num_stages)
-        self.rank_speed = rank_speed            # straggler mitigation weights
+        self.service = SchedulerService(dataset, spec, lookahead=lookahead,
+                                        async_plan=sched_async,
+                                        plan_ahead=plan_ahead)
+        if rank_speed is not None:
+            self.service.update_rank_speed(rank_speed)
+
+    # the spec lives in the service (the trainer re-aligns use_offload
+    # through this property — see Trainer._align_offload)
+    @property
+    def spec(self) -> PlanSpec:
+        return self.service.spec
+
+    @spec.setter
+    def spec(self, value: PlanSpec):
+        self.service.spec = value
+
+    @property
+    def rank_speed(self) -> Optional[np.ndarray]:
+        return self.service.rank_speed
 
     @property
     def capacity(self) -> int:
@@ -95,16 +118,24 @@ class GlobalScheduler:
         return self.spec.strategy
 
     def plan_step(self, step: int) -> StepPlan:
-        lengths = self.ds.step_lengths(step)
-        plan = plan_batch(lengths,
-                          self.spec.replace(rank_speed=self.rank_speed))
-        plan.stats["lengths"] = len(lengths)
-        return plan
+        return self.service.plan_step(step)
+
+    def get_step(self, step: int):
+        """(plan, pre-materialized waves or None) — see SchedulerService."""
+        return self.service.get_step(step)
 
     def update_rank_speed(self, speed: np.ndarray):
-        """Straggler mitigation: the trainer feeds back EMA per-rank speeds;
-        subsequent plans give slow ranks proportionally less work."""
-        self.rank_speed = speed
+        """Straggler mitigation: the trainer feeds back *measured* per-rank
+        speeds (sched/calibrate.py); windows planned from now on give slow
+        ranks proportionally less work."""
+        self.service.update_rank_speed(speed)
+
+    def update_coeffs(self, coeffs):
+        """Swap refitted Eq. 3 cost coefficients into future windows."""
+        self.service.update_coeffs(coeffs)
+
+    def stop(self):
+        self.service.stop()
 
 
 class WaveMaterializer:
@@ -164,11 +195,17 @@ class WaveMaterializer:
     def _prefetched(self, produce) -> Iterator:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = object()
+        err: List[BaseException] = []
 
         def producer():
             try:
                 for item in produce():
                     q.put(item)
+            except BaseException as e:
+                # a bad plan must fail the *step*, not vanish with the
+                # thread: capture and re-raise on the consumer side (the
+                # bare `finally: q.put(stop)` used to swallow it)
+                err.append(e)
             finally:
                 q.put(stop)
 
@@ -180,3 +217,5 @@ class WaveMaterializer:
                 break
             yield item
         th.join()
+        if err:
+            raise err[0]

@@ -99,6 +99,29 @@ def wave_batch_structs(cfg: ModelConfig, shape_name: str, rt: Runtime,
     return batch, comp, t_wave, n_waves
 
 
+def window_sched_stats(cfg: ModelConfig, shape_name: str, hdp: int,
+                       lookahead: int,
+                       capacity: int = DEFAULT_CAPACITY) -> dict:
+    """Lookahead-vs-per-step planning stats for a K-step window of the
+    cell's shape: the dry-run's view of the scheduler service (how many
+    distinct executables the cell would compile, and the modeled window
+    makespan both ways)."""
+    from repro.sched.lookahead import plan_window, window_stats
+    shape = SHAPES[shape_name]
+    spec = PL.PlanSpec.for_config(cfg, capacity=capacity, hdp=hdp,
+                                  use_offload=False)
+    lengths = [shape.seq_len] * max(1, shape.global_batch)
+    window = [lengths] * max(1, lookahead)
+    per_step = [PL.plan(list(l), spec) for l in window]
+    look = plan_window(window, spec)
+    ps, lk = window_stats(per_step), window_stats(look)
+    return {"lookahead": lookahead,
+            "window_makespan_per_step": round(ps["window_makespan"], 4),
+            "window_makespan_lookahead": round(lk["window_makespan"], 4),
+            "distinct_keys_per_step": ps["distinct_keys"],
+            "distinct_keys_lookahead": lk["distinct_keys"]}
+
+
 def needs_fsdp(cfg: ModelConfig, rt: Runtime) -> bool:
     params_bytes = cfg.param_count() * 2 / rt.tp
     return params_bytes > 8e9
@@ -264,7 +287,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              capacity: int = DEFAULT_CAPACITY, skip_roofline: bool = False,
              remat: str = "full", seq_parallel: bool = False,
              moe_impl: str = "gather", num_stages: int = 1,
-             pp_microbatches: Optional[int] = None):
+             pp_microbatches: Optional[int] = None, lookahead: int = 1):
     t0 = time.time()
     if num_stages > 1:
         # the Δ-extrapolation cost probe assumes the non-pipelined period
@@ -318,6 +341,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         terms["hlo_flops_global"] = glob
         terms["useful_flops_ratio"] = mf / glob if glob else 0.0
         rec.update(terms)
+    if lookahead > 1 and shape.kind in ("train", "prefill"):
+        hdp = 1
+        for ax in hdp_axes_of(mesh):
+            hdp *= mesh.shape[ax]
+        rec["sched_window"] = window_sched_stats(cfg, shape_name, hdp,
+                                                 lookahead, capacity)
     return rec
 
 
@@ -343,6 +372,9 @@ def main():
     ap.add_argument("--pp-microbatches", type=int, default=None,
                     help="microbatches per pipelined round "
                          "(default: num_stages)")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="report scheduler-service window stats for a "
+                         "K-step lookahead window of this cell's shape")
     args = ap.parse_args()
 
     if args.all:
@@ -372,7 +404,8 @@ def main():
                    skip_roofline=args.skip_roofline,
                    seq_parallel=args.seq_parallel, moe_impl=args.moe_impl,
                    num_stages=args.num_stages,
-                   pp_microbatches=args.pp_microbatches)
+                   pp_microbatches=args.pp_microbatches,
+                   lookahead=args.lookahead)
     rec["seq_parallel"] = args.seq_parallel
     rec["moe_impl"] = args.moe_impl
     line = json.dumps(rec)

@@ -42,6 +42,14 @@ def main():
     ap.add_argument("--max-round-waves", type=int, default=0,
                     help="pipelined executor: cap waves per round (0 = "
                          "uncapped) to bound in-flight activation memory")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="scheduler service: jointly plan windows of K "
+                         "upcoming steps (cross-step balance + compile-"
+                         "cache-aware compositions; 1 = per-step windows, "
+                         "still template-harmonized)")
+    ap.add_argument("--sched-async", action="store_true",
+                    help="plan + materialize upcoming steps on a planner "
+                         "thread while the current step executes")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -66,19 +74,25 @@ def main():
                           args.context)
     sched = GlobalScheduler(ds, cfg, capacity=args.capacity,
                             hdp=rt.hdp_size, strategy=args.strategy,
-                            use_offload=False)
+                            use_offload=False, lookahead=args.lookahead,
+                            sched_async=args.sched_async)
     trainer = Trainer(cfg, rt,
                       AdamWConfig(lr=args.lr, total_steps=args.steps),
                       sched, TrainerConfig(capacity=args.capacity,
                                            ckpt_dir=args.ckpt_dir,
                                            strategy=args.strategy,
                                            attn_impl=args.attn_impl,
-                                           max_round_waves=args.max_round_waves))
+                                           max_round_waves=args.max_round_waves,
+                                           sched_async=args.sched_async))
     if args.ckpt_dir and trainer.resume_if_possible():
         print(f"resumed at step {trainer.step}")
-    for rec in trainer.run(args.steps - trainer.step):
-        print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
-              f"waves {rec['waves']} wall {rec['wall_s']:.1f}s", flush=True)
+    try:
+        for rec in trainer.run(args.steps - trainer.step):
+            print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
+                  f"waves {rec['waves']} wall {rec['wall_s']:.1f}s",
+                  flush=True)
+    finally:
+        sched.stop()      # the planner thread must not outlive the loop
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Lookahead scheduling service (paper Fig. 7, the balance scheduler as a
+cross-step service).
+
+Three layers:
+
+* ``sched.lookahead``  — the window planner: jointly lays out a window of K
+  upcoming global batches so per-rank load levels *across* steps and wave
+  compositions collapse onto shared templates (far fewer distinct
+  (composition, c_mult, offload) keys → more jit/compile-cache hits, the
+  NCCL-group-cache analogue).
+* ``sched.calibrate``  — the online calibrator: measured per-wave wall
+  times → per-rank speed estimates (replacing the modeled-cost straggler
+  EMA) and refitted Eq. 3 `CostCoeffs` via `core/profiler.fit_time_coeffs`.
+* ``sched.service``    — `SchedulerService`: owns the window cursor, the
+  persistent template registry and (optionally) a planner thread that keeps
+  the next W steps' StepPlans + materialized wave buffers ready while step
+  t executes.
+
+`data.loader.GlobalScheduler` is a thin facade over `SchedulerService`.
+"""
+from repro.sched.calibrate import OnlineCalibrator
+from repro.sched.lookahead import (plan_window, wave_key, window_stats)
+from repro.sched.service import SchedulerService
+
+__all__ = ["OnlineCalibrator", "SchedulerService", "plan_window",
+           "wave_key", "window_stats"]

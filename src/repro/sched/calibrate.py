@@ -1,0 +1,138 @@
+"""Online calibration: measured wave wall times → planner inputs.
+
+The trainer's old straggler loop EMA'd the *modeled* per-rank costs of the
+plan it had just executed — on a perfectly balanced plan every rank's
+modeled cost is equal, so the estimate carried no information and a real
+straggler was invisible.  This module replaces it with measurement:
+
+* **Per-rank speed.**  Two measurement channels, matching what the
+  deployment can observe:
+
+  - ``rank_seconds`` — per-rank compute times, the paper's worker→
+    controller telemetry under async dispatch (§6.1: devices run their
+    own wave queues and report).  Each active rank's ratio of measured to
+    modeled time is a direct, well-identified speed sample.
+  - ``seconds`` — the SPMD wall time of the whole dispatch (all the
+    single-process trainer can measure): max_r cost_r / speed_r.  It is
+    attributed to the wave's modeled bottleneck rank(s).  NOTE the
+    identifiability limit: on a perfectly level wave every rank is a
+    bottleneck candidate, so a straggler that is busy in *every* wave
+    cannot be localized from wall times alone — the signal comes from
+    waves where it idles (and grows as feedback gives it less work).
+
+  A global scale EMA (measured / modeled over all observations) removes
+  the cost model's absolute error; what remains per rank is its
+  *relative* speed.  Ranks never observed stay at their prior (1.0).
+
+* **CostCoeffs refit.**  T(s) is a *per-sequence* curve — a packed bin
+  costs Σ T(len_i), a g-sharded sequence T(len)/g — so only observations
+  whose bottleneck rank held exactly one whole, unsharded sequence are
+  unit-consistent (length, seconds) samples for the fit; the caller marks
+  them via ``fit_length`` and everything else contributes to scale/speed
+  only.  Clean samples feed a least-squares refit of T(s) = α₁s² + β₁s + γ
+  via `core.profiler.fit_time_coeffs`, blended toward the running
+  coefficients so one noisy window cannot capsize the planner
+  (`profiler.blend_coeffs`).
+
+Compile-time pollution is the caller's job to exclude: the trainer skips
+`observe` for waves that triggered a fresh jit compile.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+from repro.core.offload import CostCoeffs
+
+_TIE_FRAC = 0.98          # ranks within 2% of the wave max share the blame
+_OUTLIER = 8.0            # drop samples > 8x the running scale (GC, page-in)
+_GRAD_STEP_FACTOR = 3.0   # measured walls are fwd+bwd grad steps; T(s) is
+                          # the forward-only curve (bwd ~ 2x fwd FLOPs), so
+                          # fit samples are de-scaled by this before the fit
+
+
+class OnlineCalibrator:
+    """Accumulates measured (wave, seconds) observations and answers with
+    per-rank relative speeds and refitted cost coefficients."""
+
+    def __init__(self, coeffs: CostCoeffs, hdp: int, num_layers: int, *,
+                 quadratic: bool = True, ema: float = 0.5,
+                 max_samples: int = 256, min_fit_points: int = 4,
+                 fit_time_scale: float = _GRAD_STEP_FACTOR):
+        self.base = coeffs
+        self.hdp = hdp
+        self.num_layers = max(num_layers, 1)
+        self.quadratic = quadratic
+        self.ema = ema
+        self.min_fit_points = min_fit_points
+        self.fit_time_scale = max(fit_time_scale, 1e-9)
+        self._speed = np.ones(hdp)
+        self._scale: Optional[float] = None        # EMA of measured/modeled
+        self._samples: Deque[Tuple[int, float]] = deque(maxlen=max_samples)
+        self.n_observed = 0
+
+    # ------------------------------------------------------------------
+    def observe(self, costs, seconds: Optional[float] = None,
+                rank_seconds=None, fit_length: Optional[int] = None) -> None:
+        """One executed wave (or pipelined round): ``costs`` are the plan's
+        modeled per-rank times, and the measurement is either ``seconds``
+        (SPMD wall time) or ``rank_seconds`` (per-rank worker telemetry) —
+        see module docstring for what each channel can identify.
+        ``fit_length`` marks a unit-consistent T(s) sample (the bottleneck
+        rank ran one whole unsharded sequence of that length); without it
+        the observation updates scale/speed only."""
+        costs = np.asarray(costs, float)
+        modeled = float(costs.max(initial=0.0))
+        if modeled <= 0.0:
+            return
+        if rank_seconds is not None:
+            rank_seconds = np.asarray(rank_seconds, float)
+            seconds = float(rank_seconds.max(initial=0.0))
+        if seconds is None or seconds <= 0.0:
+            return
+        ratio = seconds / modeled                   # wall per modeled second
+        if self._scale is not None and ratio > _OUTLIER * self._scale:
+            return                                  # compile / GC spike
+        self._scale = ratio if self._scale is None \
+            else self.ema * self._scale + (1 - self.ema) * ratio
+        if rank_seconds is not None:
+            # direct per-rank samples: measured_r = scale * cost_r / speed_r
+            active = np.flatnonzero((costs > 0) & (rank_seconds > 0))
+            for r in active:
+                rel = self._scale * costs[r] / rank_seconds[r]
+                self._speed[r] = (self.ema * self._speed[r]
+                                  + (1 - self.ema) * rel)
+        else:
+            # wall time blames the modeled bottleneck rank(s): how much
+            # faster/slower the wave ran than the fleet-wide scale predicts
+            rel = self._scale / ratio
+            for r in np.flatnonzero(costs >= _TIE_FRAC * modeled):
+                self._speed[r] = (self.ema * self._speed[r]
+                                  + (1 - self.ema) * rel)
+        if fit_length is not None and fit_length > 0:
+            # de-scale the grad-step wall to the forward-only curve T(s)
+            # fits (profile_model feeds the same fitter forward timings)
+            self._samples.append((int(fit_length), seconds
+                                  / self.num_layers / self.fit_time_scale))
+        self.n_observed += 1
+
+    # ------------------------------------------------------------------
+    def rank_speed(self) -> np.ndarray:
+        """Mean-1-normalized relative speeds, clamped away from 0 so a
+        noisy estimate can only *shift* work, never zero a rank out."""
+        s = np.clip(self._speed, 0.1, 10.0)
+        return s / max(float(s.mean()), 1e-9)
+
+    def coeffs(self, blend: float = 0.5) -> Optional[CostCoeffs]:
+        """Refit T(s) from the measured samples; None until the window
+        holds enough *distinct* lengths for the fit to be determined."""
+        from repro.core.profiler import blend_coeffs, fit_time_coeffs
+        lengths = [s for s, _ in self._samples]
+        if len(set(lengths)) < self.min_fit_points:
+            return None
+        fitted = fit_time_coeffs(lengths, [t for _, t in self._samples],
+                                 act_per_token=self.base.a2,
+                                 quadratic=self.quadratic)
+        return blend_coeffs(self.base, fitted, blend)

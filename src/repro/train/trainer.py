@@ -33,6 +33,7 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
+from repro.sched.calibrate import OnlineCalibrator
 from repro.models.transformer import init_params
 from repro.optim import adamw
 from repro.parallel.pipeline import (assert_pipeline_ready,
@@ -62,6 +63,16 @@ class TrainerConfig:
     max_round_waves: int = 0         # pipelined executor: split rounds
                                      # longer than this many waves (0 = no
                                      # cap) to bound in-flight activations
+    sched_async: bool = False        # consume pre-materialized waves from
+                                     # the scheduler service's planner
+                                     # thread (GlobalScheduler(sched_async=
+                                     # True) pairs with this)
+    calibrate: bool = True           # feed measured wave times back into
+                                     # the scheduler (per-rank speeds; off
+                                     # = plans depend only on the data, the
+                                     # async/sync parity setting)
+    recalibrate_every: int = 8       # refit Eq. 3 CostCoeffs from measured
+                                     # times every N steps (0 = never)
 
 
 class Trainer:
@@ -90,6 +101,17 @@ class Trainer:
         self.ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
         self.rank_times = np.zeros(rt.hdp_size)
         self.history: list = []
+        self.calib = OnlineCalibrator(
+            scheduler.spec.coeffs, rt.hdp_size, cfg.num_layers,
+            quadratic=scheduler.spec.quadratic, ema=tcfg.straggler_ema)
+        self.wave_time_fn = None     # test hook: fake per-wave clock
+        self._clock = time.perf_counter
+        if tcfg.sched_async and not self.pipelined \
+                and hasattr(scheduler, "service"):
+            # materialize-ahead: the planner thread pre-builds upcoming
+            # steps' wave buffers (the pipelined path keeps iter_rounds'
+            # own prefetch — rounds stack waves differently)
+            scheduler.service.attach_materializer(self.loader)
 
     # ------------------------------------------------------------------
     def _align_offload(self, scheduler: GlobalScheduler):
@@ -107,27 +129,35 @@ class Trainer:
         if self.offload_ok and offload_ratio > 0:
             rt_wave = dc.replace(
                 rt_wave, remat="offload",
-                offload_periods=offload_periods(self.cfg, offload_ratio))
+                # stage-aware count: under PP the stage vmap applies the
+                # window per stage, so the static count must be sized
+                # against the stage-local period window (core/offload.py)
+                offload_periods=offload_periods(self.cfg, offload_ratio,
+                                                self.rt.num_stages))
         return rt_wave
 
     def _wave_fn(self, composition, c_mult, offload_ratio):
+        """-> (jitted executable, fresh) — ``fresh`` marks a cache miss
+        (the dispatch will pay a compile; the calibrator skips it)."""
         key = (composition, c_mult, round(offload_ratio, 2))
-        if key not in self._exec_cache:
+        fresh = key not in self._exec_cache
+        if fresh:
             rt_wave = self._wave_rt(composition, offload_ratio)
             self._exec_cache[key] = jax.jit(
                 lambda p, g, b: self.grad_step(p, g, b, rt_wave))
-        return self._exec_cache[key]
+        return self._exec_cache[key], fresh
 
     def _round_fn(self, composition, c_mult, offload_ratio, n_waves: int):
         """Pipelined executable for a round of ``n_waves`` like waves —
         the compile-cache analogue of `_wave_fn` with the microbatch
         stream length as part of the key."""
         key = ("pp", composition, c_mult, round(offload_ratio, 2), n_waves)
-        if key not in self._exec_cache:
+        fresh = key not in self._exec_cache
+        if fresh:
             rt_round = self._wave_rt(composition, offload_ratio)
             self._exec_cache[key] = jax.jit(
                 lambda p, g, b: self.pipeline_grad_step(p, g, b, rt_round))
-        return self._exec_cache[key]
+        return self._exec_cache[key], fresh
 
     def resume_if_possible(self):
         if self.ckpt is None:
@@ -144,59 +174,134 @@ class Trainer:
         """Elastic rescale: params/opt are HDP-replicated; only the plan
         changes.  (On hardware this follows a mesh re-init + ZeRO reshard
         via the checkpoint restore path.)"""
+        if new_hdp_scheduler is not self.sched \
+                and hasattr(self.sched, "stop"):
+            self.sched.stop()   # old planner thread + pre-built buffers
         self.sched = new_hdp_scheduler
         self._align_offload(new_hdp_scheduler)
         self.rank_times = np.zeros(new_hdp_scheduler.hdp)
+        self.calib = OnlineCalibrator(
+            new_hdp_scheduler.spec.coeffs, new_hdp_scheduler.hdp,
+            self.cfg.num_layers, quadratic=new_hdp_scheduler.spec.quadratic,
+            ema=self.tcfg.straggler_ema)
+        if self.tcfg.sched_async and not self.pipelined \
+                and hasattr(new_hdp_scheduler, "service"):
+            new_hdp_scheduler.service.attach_materializer(self.loader)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _fit_length(waves) -> Optional[int]:
+        """A unit-consistent T(s) sample exists only when the dispatch was
+        a single wave whose bottleneck rank ran exactly one whole,
+        unsharded sequence (a packed bin costs Σ T(len_i), a sharded one
+        T(len)/g, a round M·T(s) — all different curves than T(s))."""
+        if len(waves) != 1:
+            return None
+        w = waves[0]
+        r = int(np.argmax(w.costs))
+        width, start = 1, 0
+        for g in w.composition:
+            if start <= r < start + g:
+                width = g
+                break
+            start += g
+        slot = w.slots[r]
+        if width == 1 and len(slot) == 1 and slot[0].start == 0:
+            return slot[0].length
+        return None
+
+    def _observe(self, waves, measured, fresh_compile: bool):
+        """Feed one measured dispatch (a wave, or a pipelined round's
+        waves) to the calibrator.  ``measured`` is the SPMD wall time
+        (float) or a per-rank time vector (worker telemetry — the
+        `wave_time_fn` test/deployment hook can supply it).  Skip
+        dispatches that paid a jit compile — their wall time says nothing
+        about rank speed."""
+        if fresh_compile or not self.tcfg.calibrate:
+            return
+        costs = np.zeros(self.sched.hdp)
+        for w in waves:
+            costs += np.asarray(w.costs)
+        kw = dict(fit_length=self._fit_length(waves))
+        if np.ndim(measured) > 0:
+            self.calib.observe(costs, rank_seconds=measured, **kw)
+        else:
+            self.calib.observe(costs, seconds=float(measured), **kw)
+
     def train_step(self) -> Dict:
-        plan = self.sched.plan_step(self.step)
+        if self.tcfg.sched_async and hasattr(self.sched, "get_step"):
+            plan, pre_waves = self.sched.get_step(self.step)
+        else:
+            plan, pre_waves = self.sched.plan_step(self.step), None
         denom = float(plan.denom)
         grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                              self.params)
         losses = []
         t0 = time.time()
-        wave_costs = np.zeros(self.sched.hdp)
         rec_extra = {}
         if self.pipelined:
             # pipelined executor: the wave queue runs as rounds of like
             # waves, each round one wavefront schedule (parallel/pipeline);
             # round r+1 materializes in the background while r executes
             rounds = pipeline_rounds(plan, self.tcfg.max_round_waves)
-            for rd, stacked in zip(rounds, self.loader.iter_rounds(
+            # driven off the prefetch iterator (not zip) so it drains
+            # fully — its epilogue joins the producer thread and re-raises
+            # any captured producer error
+            for i, stacked in enumerate(self.loader.iter_rounds(
                     self.step, plan, rounds)):
+                rd = rounds[i]
                 batch = {k: jnp.asarray(v) for k, v in stacked.items()}
                 batch["denom"] = jnp.float32(denom)
-                fn = self._round_fn(rd.composition, rd.c_mult,
-                                    rd.offload_ratio, len(rd.wave_ids))
+                fn, fresh = self._round_fn(rd.composition, rd.c_mult,
+                                           rd.offload_ratio,
+                                           len(rd.wave_ids))
+                t_w = self._clock()
                 grads, metrics = fn(self.params, grads, batch)
-                losses.append(float(metrics["loss"]))
+                losses.append(float(metrics["loss"]))    # blocks: the
+                dt = self._clock() - t_w                 # round completed
+                rd_waves = [plan.waves[i] for i in rd.wave_ids]
+                if self.wave_time_fn is not None:
+                    dt, fresh = self.wave_time_fn(rd_waves), False
+                self._observe(rd_waves, dt, fresh)
             sched_stats = pipeline_schedule_stats(
                 plan, self.rt.num_stages, self.tcfg.max_round_waves)
             rec_extra = {"rounds": len(rounds),
                          "bubble_frac_pipeline":
                              sched_stats["bubble_frac_pipeline"]}
         else:
-            for lw in self.loader.iter_step(self.step, plan):
+            wave_iter = iter(pre_waves) if pre_waves is not None \
+                else self.loader.iter_step(self.step, plan)
+            for i, lw in enumerate(wave_iter):      # drains the prefetch
+                wave = plan.waves[i]                # iterator fully (see
+                                                    # the rounds loop)
                 batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
                 batch["denom"] = jnp.float32(denom)
-                fn = self._wave_fn(lw.composition, lw.c_mult,
-                                   lw.offload_ratio)
+                fn, fresh = self._wave_fn(lw.composition, lw.c_mult,
+                                          lw.offload_ratio)
+                t_w = self._clock()
                 grads, metrics = fn(self.params, grads, batch)
-                losses.append(float(metrics["loss"]))
+                losses.append(float(metrics["loss"]))    # blocks: the
+                dt = self._clock() - t_w                 # wave completed
+                if self.wave_time_fn is not None:
+                    dt, fresh = self.wave_time_fn(wave), False
+                self._observe([wave], dt, fresh)
         self.params, self.opt_state, om = jax.jit(self.apply_step)(
             self.params, self.opt_state, grads)
-        # straggler feedback: EMA of per-rank modeled times this step
-        for w in plan.waves:
-            wave_costs += np.asarray(w.costs)
-        speed = 1.0 / np.maximum(wave_costs / max(wave_costs.mean(), 1e-9),
-                                 1e-3)
-        if self.sched.rank_speed is None:
-            self.sched.update_rank_speed(speed)
-        else:
-            a = self.tcfg.straggler_ema
-            self.sched.update_rank_speed(a * self.sched.rank_speed
-                                         + (1 - a) * speed)
+        # straggler feedback: *measured* per-rank speeds (the old loop
+        # EMA'd the plan's own modeled costs — on a balanced plan every
+        # rank looked identical and a real straggler was invisible)
+        if self.tcfg.calibrate and self.calib.n_observed > 0:
+            self.sched.update_rank_speed(self.calib.rank_speed())
+            if self.tcfg.recalibrate_every > 0 \
+                    and (self.step + 1) % self.tcfg.recalibrate_every == 0 \
+                    and hasattr(self.sched, "update_coeffs"):
+                refit = self.calib.coeffs()
+                if refit is not None:
+                    self.sched.update_coeffs(refit)
+        if hasattr(self.sched, "service"):
+            # compiled keys seed future windows' composition templates
+            self.sched.service.warm_keys(
+                [k for k in self._exec_cache if k[0] != "pp"])
         self.step += 1
         rec = {"step": self.step, "loss": float(np.sum(losses)),
                "waves": len(plan.waves),

@@ -1,0 +1,81 @@
+"""Data-pipeline behaviour: prefetch error propagation and the
+GlobalScheduler facade over the scheduler service."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.loader import (GlobalScheduler, SyntheticDataset,
+                               WaveMaterializer)
+from repro.data.distribution import LengthDistribution
+
+DIST = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+CFG = get_config("llama3.2-3b").reduced()
+
+
+def _dataset(tokens=4096):
+    return SyntheticDataset(DIST, CFG.vocab_size, tokens_per_step=tokens,
+                            context=2048)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def test_prefetch_reraises_producer_exception():
+    """A producer-thread failure must surface in the consumer, not vanish
+    behind the stop sentinel (the old `finally: q.put(stop)` swallowed
+    it and the step silently saw fewer waves)."""
+    mat = WaveMaterializer(_dataset(), CFG, capacity=512)
+
+    def produce():
+        yield "first"
+        raise _Boom("bad plan")
+
+    it = mat._prefetched(produce)
+    assert next(it) == "first"
+    with pytest.raises(_Boom, match="bad plan"):
+        list(it)
+
+
+def test_prefetch_immediate_failure_raises():
+    mat = WaveMaterializer(_dataset(), CFG, capacity=512)
+
+    def produce():
+        raise _Boom("no items at all")
+        yield  # pragma: no cover
+
+    with pytest.raises(_Boom):
+        list(mat._prefetched(produce))
+
+
+def test_materialized_waves_match_plan():
+    """Every wave's buffers cover exactly the planned pieces (labels are
+    next-token within the original sequence)."""
+    ds = _dataset()
+    sched = GlobalScheduler(ds, CFG, capacity=512, hdp=1,
+                            use_offload=False)
+    mat = WaveMaterializer(ds, CFG, capacity=512)
+    plan = sched.plan_step(0)
+    for wave, lw in zip(plan.waves, mat.iter_step(0, plan)):
+        t = len(wave.slots) * 512 * wave.c_mult
+        assert lw.batch["tokens"].shape == (t,)
+        # seg ids mark exactly the planned tokens
+        planned = sum(p.length for slot in wave.slots for p in slot)
+        assert int((lw.batch["seg"] > 0).sum()) == planned
+
+
+def test_facade_delegates_to_service():
+    """GlobalScheduler is a thin facade: spec/rank_speed/plan_step go
+    through the SchedulerService, and spec writes (the trainer's offload
+    re-alignment) stick."""
+    sched = GlobalScheduler(_dataset(), CFG, capacity=512, hdp=2,
+                            use_offload=True)
+    assert sched.service.spec is sched.spec
+    sched.spec = sched.spec.replace(use_offload=False)
+    assert sched.service.spec.use_offload is False
+    assert sched.rank_speed is None
+    sched.update_rank_speed(np.array([1.0, 0.5]))
+    assert sched.service.rank_speed is not None
+    p = sched.plan_step(0)
+    assert p.denom == sum(sched.ds.step_lengths(0))
+    assert p.stats["lookahead"] == 1

@@ -118,3 +118,66 @@ def test_offload_remat_executes_on_host_memory():
         out = jax.jit(lambda p, b: forward_hidden(p, cfg, rt, b))(params,
                                                                   batch)
         assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# stage-aware offload windows (PP x offload, ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_stages", [1, 2, 4])
+@pytest.mark.parametrize("r", [0.0, 0.2, 0.37, 0.5, 0.8, 1.0])
+def test_stage_offload_windows_tile_global_window(num_stages, r):
+    """The per-stage windows are the global leading window [0, round(r*n))
+    cut at stage boundaries: disjoint, contiguous, and tiling it exactly."""
+    cfg = get_config("llama3.2-3b")
+    n = OF.scan_periods(cfg)
+    if n % num_stages:
+        pytest.skip(f"{n} periods don't split into {num_stages} stages")
+    k = int(round(r * n))
+    windows = OF.stage_offload_windows(cfg, r, num_stages)
+    assert len(windows) == num_stages
+    n_local = n // num_stages
+    cursor = 0
+    total = 0
+    for s, (lo, hi) in enumerate(windows):
+        assert lo == s * n_local                  # anchored at stage start
+        assert lo <= hi <= (s + 1) * n_local      # inside the stage span
+        if hi > lo:
+            assert lo == cursor                   # contiguous with previous
+            cursor = hi
+        total += hi - lo
+    assert total == k                             # tiles [0, k) exactly
+
+
+@pytest.mark.parametrize("num_stages", [2, 4])
+@pytest.mark.parametrize("r", [0.1, 0.33, 0.62, 0.99])
+def test_quantized_ratio_makes_uniform_stage_counts_exact(num_stages, r):
+    """PP co-plan: after quantize_stage_ratio the SPMD-uniform per-stage
+    count (offload_periods with num_stages) sums to the global count with
+    zero drift — and never *undershoots* the requested ratio."""
+    cfg = get_config("llama3.2-3b")
+    n = OF.scan_periods(cfg)
+    if n % num_stages:
+        pytest.skip(f"{n} periods don't split into {num_stages} stages")
+    rq = OF.quantize_stage_ratio(r, n, num_stages)
+    assert rq >= min(r, 1.0) - 1e-9
+    per_stage = OF.offload_periods(cfg, rq, num_stages)
+    assert num_stages * per_stage == int(round(rq * n))
+
+
+def test_stage_aware_count_fixes_overshoot():
+    """Regression: the old global count applied per stage offloaded up to
+    num_stages x the planned fraction; the stage-aware count matches it."""
+    cfg = get_config("llama3.2-3b")
+    n = OF.scan_periods(cfg)
+    num_stages = 2
+    if n % num_stages:
+        pytest.skip(f"{n} periods don't split into {num_stages} stages")
+    r = 0.5
+    global_count = OF.offload_periods(cfg, r)            # = round(r * n)
+    per_stage = OF.offload_periods(cfg, r, num_stages)
+    # per-stage x stages stays at the planned global fraction...
+    assert num_stages * per_stage == pytest.approx(global_count, abs=1)
+    # ...whereas applying the global count per stage overshoots
+    old_effective = num_stages * min(global_count, n // num_stages)
+    assert old_effective > global_count

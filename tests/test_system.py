@@ -60,6 +60,22 @@ def test_straggler_feedback_updates(rt1, tmp_path):
     assert tr.sched.rank_speed is not None
 
 
+def test_rank_speed_comes_from_measurements(rt1, tmp_path):
+    """The straggler weights now come from the calibrator's *measured*
+    observations, not the plan's own modeled costs: the trainer's
+    calibrator must have consumed wave timings by the time rank_speed is
+    set (the multi-rank detection regression runs on 8 devices in
+    tests/test_sched_service.py::test_trainer_detects_slow_rank_8dev)."""
+    cfg = get_config("llama3.2-3b").reduced()
+    tr = _mk(cfg, rt1, str(tmp_path))
+    for _ in tr.run(2):
+        pass
+    assert tr.calib.n_observed > 0
+    assert tr.sched.rank_speed is not None
+    np.testing.assert_allclose(tr.sched.rank_speed,
+                               tr.calib.rank_speed())
+
+
 def test_strategies_all_run(rt1, tmp_path):
     cfg = get_config("llama3.2-3b").reduced()
     for strategy in ("static", "naive", "balance"):
