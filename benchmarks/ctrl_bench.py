@@ -1,0 +1,188 @@
+"""Control-plane overhead benchmark → ``BENCH_ctrl.json``.
+
+Measures the controller-side cost of one step of the worker↔controller
+protocol — window planning, plan pickling + dispatch, STEP_DONE
+collection and per-rank telemetry ingestion — against the wall time of a
+real single-process CPU training step.  The workers are in-process stubs
+that speak the full wire protocol (hello/config/ready/plan/step_done/
+heartbeat/bye) but execute nothing, so the measurement isolates the
+control plane from compute.
+
+Gate (CI): control-plane overhead per step < 5% of a CPU training step —
+the controller must be invisible next to the math.
+
+Run: ``python -m benchmarks.ctrl_bench [--steps N] [--skip-step-wall]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pickle
+import threading
+import time
+
+SNAPSHOT_PATH = "BENCH_ctrl.json"
+OVERHEAD_GATE = 0.05
+
+
+def _mk_inputs(hdp: int = 4, capacity: int = 256,
+               tokens_per_step: int = 2048):
+    from repro.configs.registry import get_config
+    from repro.core.planner import PlanSpec
+    from repro.data.distribution import LengthDistribution
+    from repro.data.loader import SyntheticDataset
+
+    cfg = get_config("llama3.2-3b").reduced()
+    dist = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, tokens_per_step,
+                          context=1024)
+    spec = PlanSpec.for_config(cfg, capacity=capacity, hdp=hdp,
+                               use_offload=False)
+    return cfg, ds, spec
+
+
+def _stub_worker(address: str) -> None:
+    """Protocol-complete worker that executes nothing: replies to every
+    plan with an instant step_done carrying full per-rank telemetry."""
+    from repro.ctrl.rpc import connect
+    chan = connect(address)
+    chan.send({"type": "hello"})
+    cfg = chan.recv()
+    assert cfg["type"] == "config"
+    ranks = cfg["ranks"]
+    chan.send({"type": "ready", "step": cfg.get("resume_step", 0)})
+    try:
+        while True:
+            msg = chan.recv()
+            if msg["type"] == "plan":
+                tel = [{"ranks": ranks, "times": [1e-3] * len(ranks),
+                        "exact": True,   # gate the per-rank ingest path,
+                        "fresh": False}  # not the degraded wall channel
+                       for _ in msg["plan"].waves]
+                chan.send({"type": "step_done", "step": msg["step"],
+                           "loss": 0.0, "grad_norm": 0.0, "keys": [],
+                           "telemetry": tel})
+            elif msg["type"] == "shutdown":
+                chan.send({"type": "bye"})
+                return
+    except (EOFError, OSError):
+        pass
+    finally:
+        chan.close()
+
+
+def controller_roundtrip(steps: int = 30, num_workers: int = 2,
+                         lookahead: int = 2) -> dict:
+    """Controller-side wall per step of the full plan→dispatch→telemetry
+    loop (stub workers, no compute), plus the dispatch payload size."""
+    from repro.ctrl.controller import Controller, ControllerConfig
+
+    cfg, ds, spec = _mk_inputs()
+    ctl = Controller(ds, cfg, spec, ControllerConfig(
+        num_workers=num_workers, steps=steps, lookahead=lookahead,
+        calibrate=True, heartbeat_interval=0.2))
+    addr = ctl.serve()
+    threads = [threading.Thread(target=_stub_worker, args=(addr,),
+                                daemon=True) for _ in range(num_workers)]
+    for t in threads:
+        t.start()
+    ctl.wait_for_workers()
+    plan, _ = ctl.service.get_step(0)
+    payload = len(pickle.dumps(
+        {"type": "plan", "step": 0, "plan": plan, "waves": None,
+         "state": ctl.state_dict()}, protocol=4))
+    walls = []
+    last = [time.perf_counter()]
+
+    def on_step(_ctl, _rec):
+        now = time.perf_counter()
+        walls.append(now - last[0])
+        last[0] = now
+
+    hist = ctl.run(on_step=on_step)
+    assert len(hist) == steps
+    for t in threads:
+        t.join(timeout=10.0)
+    import numpy as np
+    warm = walls[min(3, len(walls) - 1):] or walls
+    return {"per_step_ms": float(np.median(warm)) * 1e3, "steps": steps,
+            "num_workers": num_workers, "payload_bytes": payload}
+
+
+def cpu_step_wall(steps: int = 4) -> float:
+    """Median wall of a real single-process CPU training step (compile
+    excluded), milliseconds."""
+    import numpy as np
+    from repro import compat
+    from repro.data.loader import GlobalScheduler
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.sharding import single_device_runtime
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg, ds, _ = _mk_inputs(hdp=1)
+    rt = single_device_runtime(remat="none")
+    compat.set_mesh(rt.mesh)
+    sched = GlobalScheduler(ds, cfg, capacity=256, hdp=1,
+                            use_offload=False)
+    tr = Trainer(cfg, rt, AdamWConfig(lr=1e-3, total_steps=steps + 1),
+                 sched, TrainerConfig(capacity=256, calibrate=False))
+    tr.train_step()                           # compile
+    walls = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        tr.train_step()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)) * 1e3
+
+
+def snapshot(path: str = SNAPSHOT_PATH, steps: int = 30,
+             skip_step_wall: bool = False) -> dict:
+    rt = controller_roundtrip(steps=steps)
+    snap = {"controller": dict(rt)}
+    if not skip_step_wall:
+        wall = cpu_step_wall()
+        frac = rt["per_step_ms"] / wall if wall > 0 else 0.0
+        snap["cpu_step_ms"] = round(wall, 2)
+        snap["overhead_frac"] = round(frac, 5)
+        snap["gate"] = OVERHEAD_GATE
+        snap["gate_ok"] = bool(frac < OVERHEAD_GATE)
+    snap["controller"]["per_step_ms"] = round(rt["per_step_ms"], 3)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return snap
+
+
+def rows_from(snap: dict) -> list:
+    rows = [("ctrl.dispatch_roundtrip",
+             snap["controller"]["per_step_ms"] * 1e3,
+             f"payload_B={snap['controller']['payload_bytes']}")]
+    if "overhead_frac" in snap:
+        rows.append(("ctrl.overhead_vs_cpu_step",
+                     snap["cpu_step_ms"] * 1e3,
+                     f"overhead_frac={snap['overhead_frac']}"))
+    return rows
+
+
+def run() -> list:
+    return rows_from(snapshot())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--out", default=SNAPSHOT_PATH)
+    ap.add_argument("--skip-step-wall", action="store_true",
+                    help="wire-only measurement (no jax compile)")
+    args = ap.parse_args()
+    snap = snapshot(args.out, steps=args.steps,
+                    skip_step_wall=args.skip_step_wall)
+    print(json.dumps(snap, indent=1, sort_keys=True))
+    if "gate_ok" in snap and not snap["gate_ok"]:
+        raise SystemExit(
+            f"control-plane overhead {snap['overhead_frac']:.3%} exceeds "
+            f"the {OVERHEAD_GATE:.0%} gate")
+
+
+if __name__ == "__main__":
+    main()

@@ -116,6 +116,14 @@ def main() -> None:
     except Exception as e:
         rows.append(("benchmarks.scheduler_bench.ERROR", 0.0, repr(e)[:120]))
         sys.stderr.write(f"[scheduler_snapshot] FAILED: {e!r}\n")
+    try:
+        from benchmarks import ctrl_bench
+        rows.extend(ctrl_bench.run())
+        sys.stderr.write(
+            f"[ctrl_snapshot] -> {ctrl_bench.SNAPSHOT_PATH}\n")
+    except Exception as e:
+        rows.append(("benchmarks.ctrl_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[ctrl_snapshot] FAILED: {e!r}\n")
     t0 = time.perf_counter()
     try:
         rows.extend(kernels_snapshot())

@@ -7,6 +7,11 @@ Layout:  <dir>/step_<N>/
 A checkpoint only becomes visible when its directory is atomically renamed
 from ``.tmp-step_<N>``; torn writes from a killed process are never
 restorable, and ``latest_step`` skips corrupt/partial directories.
+``latest_valid_step``/``restore_latest`` additionally verify the sha256
+and FALL BACK to the newest checkpoint that passes integrity — elastic
+restarts hit exactly the "newest dir exists but its payload is damaged"
+case after a mid-save kill, and must resume from the last good step
+instead of raising at the first corrupt one.
 Restore re-shards: leaves are ``jax.device_put`` with the *current* mesh's
 shardings, so elastic resizes (different d_hdp, ZeRO re-partition) restore
 transparently — HDP replicates params, so only the opt-state slicing
@@ -19,7 +24,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -104,6 +109,56 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.steps()
         return max(steps) if steps else None
+
+    # ------------------------------------------------------------------
+    def _verified_manifest(self, step: int) -> Optional[Dict]:
+        """The step's manifest iff the payload passes the sha256 check;
+        None on any damage (missing/corrupt manifest or arrays)."""
+        d = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            with open(os.path.join(d, "arrays.npz"), "rb") as f:
+                sha = hashlib.sha256(f.read()).hexdigest()
+        except (OSError, ValueError):
+            return None
+        return manifest if sha == manifest.get("sha256") else None
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest step whose payload passes integrity (None if none do)."""
+        state = self.latest_valid_state()
+        return state[0] if state else None
+
+    def latest_valid_state(self) -> Optional[Tuple[int, Dict]]:
+        """(step, data_state) of the newest checkpoint passing integrity —
+        one read+hash, no array loading; the control plane resumes its
+        scheduler/calibrator state from here on an elastic restart."""
+        for s in sorted(self.steps(), reverse=True):
+            manifest = self._verified_manifest(s)
+            if manifest is not None:
+                return s, manifest["data_state"]
+        return None
+
+    def read_data_state(self, step: int) -> Optional[Dict]:
+        """The step's ``data_state`` without loading arrays (integrity-
+        checked)."""
+        manifest = self._verified_manifest(step)
+        return None if manifest is None else manifest["data_state"]
+
+    def restore_latest(self, params_like, opt_like, shardings=None,
+                       opt_shardings=None):
+        """Restore the newest checkpoint that passes integrity, skipping
+        corrupt ones.  Returns ``(step, params, opt_state, data_state)``
+        or None when no valid checkpoint exists.  (`restore` verifies the
+        sha itself, so candidates need no separate pre-read.)"""
+        for s in sorted(self.steps(), reverse=True):
+            try:
+                params, opt, ds = self.restore(s, params_like, opt_like,
+                                               shardings, opt_shardings)
+            except (OSError, KeyError, ValueError):
+                continue            # corrupt/torn: fall back to older
+            return s, params, opt, ds
+        return None
 
     def restore(self, step: int, params_like, opt_like,
                 shardings=None, opt_shardings=None):

@@ -1,0 +1,6 @@
+"""Distributed control plane (ByteScale §6.1): a controller process that
+owns planning/calibration and dispatches per-step plans to worker agents
+over a lightweight RPC, with heartbeat-based failure detection and elastic
+re-planning (ctrl/elastic.py).  `launch/cluster.py` runs the whole plane as
+N local CPU processes for tests and CI; on a pod the same controller drives
+one agent per host."""

@@ -1,0 +1,393 @@
+"""The controller: owns the scheduling brain, drives worker agents.
+
+ByteScale §6.1 runs the balance scheduler as a central controller fed by a
+worker→controller channel: every worker reports measured per-step times
+and the controller re-weights data assignment.  This module is that
+process.  It owns the `SchedulerService` (windows, templates, straggler
+weights) and the `OnlineCalibrator`, and speaks the ctrl/rpc.py framed
+protocol to N `WorkerAgent`s (ctrl/worker.py):
+
+    controller                         worker w (owns global ranks R_w)
+    ----------                         ------------------------------
+                <------ hello ------   (worker announces itself)
+    config  ------------------------>  (model/spec/ranks/resume point)
+                <------ ready ------   (trainer built, resumed)
+    plan(t) ------------------------>  (StepPlan [+ pre-built buffers,
+                                        + controller state snapshot])
+                <-- heartbeat ... --   (background thread, both phases)
+                <---- step_done ----   (loss, warm compile keys, and the
+                                        §6.1 telemetry: per-wave wall
+                                        times of exactly the ranks R_w)
+    ... repeat; on membership loss -> ctrl/elastic.py re-plans ...
+    shutdown ----------------------->  (final checkpoint, bye)
+
+Telemetry replaces the single-process trainer's bottleneck attribution:
+each dispatch's per-rank times are assembled from the owning workers'
+partial reports (`OnlineCalibrator.ingest`) — a straggler is identified
+directly instead of inferred from whole-wave maxima.
+
+The controller is a pure control-plane process: it plans with numpy,
+never touches devices, and a dead worker surfaces as a channel EOF or a
+heartbeat timeout (`MembershipChange`), handled by the elastic supervisor.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.planner import PlanSpec
+from repro.ctrl import elastic
+from repro.ctrl.rpc import Channel, Listener
+from repro.data.loader import WaveMaterializer
+from repro.parallel.pipeline import pipeline_rounds, rounds_splitter
+from repro.sched.calibrate import OnlineCalibrator, fit_length_of
+from repro.sched.service import SchedulerService
+
+
+@dataclass
+class ControllerConfig:
+    num_workers: int
+    steps: int = 10
+    lookahead: int = 1
+    async_plan: bool = False         # planner thread inside the service
+                                     # (False keeps plan order bit-stable
+                                     # w.r.t. warm-key arrival)
+    calibrate: bool = True           # telemetry -> straggler re-weighting
+    recalibrate_every: int = 8       # CostCoeffs refit cadence (0 = never)
+    straggler_ema: float = 0.5
+    ship_buffers: bool = False       # materialize wave buffers controller-
+                                     # side and send them with the plan
+                                     # (the paper's remote dataloader);
+                                     # False = workers build from metadata
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 5
+    heartbeat_interval: float = 0.5  # worker -> controller cadence
+    heartbeat_timeout: float = 60.0  # missed-heartbeat declare-dead bound
+                                     # (crashes are caught instantly via
+                                     # EOF; this catches a frozen agent
+                                     # whose beat thread stopped)
+    progress_timeout: float = 0.0    # declare dead when the heartbeat's
+                                     # progress counter stalls this long —
+                                     # catches a HUNG trainer that keeps
+                                     # beating (stuck collective); 0 =
+                                     # off.  The counter moves per
+                                     # dispatch, step, and trainer
+                                     # (re)build, so size it WELL ABOVE
+                                     # the slowest single dispatch
+                                     # INCLUDING a fresh jit compile —
+                                     # compiles stall progress and a
+                                     # too-tight bound cascades into
+                                     # kill → recompile → kill
+    accept_timeout: float = 300.0
+    seed: int = 0
+    max_round_waves: int = 0
+    tp: int = 1                      # each worker's model-parallel width
+    # passed through to every worker's TrainerConfig / Runtime build
+    runtime_kw: Dict = field(default_factory=dict)
+    opt_kw: Dict = field(default_factory=dict)
+    # fault-injection drill: {global_rank: slowdown_factor} installs a
+    # fake per-rank clock on the owning worker (validates the straggler
+    # feedback loop end-to-end; tests and gamedays)
+    slow_ranks: Optional[Dict[int, float]] = None
+
+
+class WorkerHandle:
+    """Controller-side state for one connected worker."""
+
+    def __init__(self, wid: int, chan: Channel, ranks: List[int]):
+        self.wid = wid
+        self.chan = chan
+        self.ranks = ranks           # global HDP ranks this worker owns
+        self.inbox: "queue.Queue" = queue.Queue()
+        self.last_seen = time.monotonic()
+        self.progress = -1           # worker's dispatch counter: beats
+        self.progress_seen = time.monotonic()   # keep arriving from a
+        self.alive = True            # hung trainer (dedicated thread),
+        self.reason = ""             # but this counter stops moving
+        self._thread: Optional[threading.Thread] = None
+
+    def start_reader(self) -> None:
+        def reader():
+            try:
+                while True:
+                    msg = self.chan.recv()
+                    self.last_seen = time.monotonic()
+                    if msg.get("type") == "heartbeat":
+                        p = msg.get("progress")
+                        if p is not None and p != self.progress:
+                            self.progress = p
+                            self.progress_seen = self.last_seen
+                        continue
+                    self.progress_seen = self.last_seen   # any reply is
+                    self.inbox.put(msg)                   # forward motion
+            except (EOFError, OSError) as e:
+                self.reason = self.reason or f"channel lost: {e!r}"
+            finally:
+                self.alive = False            # polled by _await and the
+                self.inbox.put(None)          # step loop; sentinel
+        self._thread = threading.Thread(target=reader, daemon=True)
+        self._thread.start()
+
+    def mark_dead(self, reason: str) -> None:
+        if self.alive:
+            self.reason = reason
+            self.alive = False
+        self.chan.close()                     # reader exits via EOF
+
+    def send(self, msg: dict) -> bool:
+        try:
+            self.chan.send(msg)
+            return True
+        except (OSError, EOFError) as e:
+            self.mark_dead(f"send failed: {e!r}")
+            return False
+
+
+class Controller:
+    def __init__(self, dataset, model_cfg, spec: PlanSpec,
+                 ccfg: ControllerConfig):
+        assert spec.hdp % ccfg.num_workers == 0, \
+            (spec.hdp, ccfg.num_workers, "workers partition the HDP axis")
+        self.ds = dataset
+        self.model_cfg = model_cfg
+        self.spec = spec
+        self.ccfg = ccfg
+        self.handles: List[WorkerHandle] = []
+        self.history: List[Dict] = []
+        self.step = 0
+        self.listener: Optional[Listener] = None
+        self.ckpt = CheckpointManager(ccfg.ckpt_dir) if ccfg.ckpt_dir \
+            else None
+        self.supervisor = elastic.ElasticSupervisor(
+            self, timeout=ccfg.heartbeat_timeout,
+            progress_timeout=ccfg.progress_timeout)
+        self._make_service(spec)
+
+    # -- wiring --------------------------------------------------------
+    def _make_service(self, spec: PlanSpec) -> None:
+        self.spec = spec
+        self.service = SchedulerService(self.ds, spec,
+                                        lookahead=self.ccfg.lookahead,
+                                        async_plan=self.ccfg.async_plan)
+        self.calib = OnlineCalibrator(
+            spec.coeffs, spec.hdp, self.model_cfg.num_layers,
+            quadratic=spec.quadratic, ema=self.ccfg.straggler_ema)
+        self.materializer = WaveMaterializer(
+            self.ds, self.model_cfg, spec.capacity) \
+            if self.ccfg.ship_buffers else None
+        if self.materializer is not None and self.ccfg.async_plan:
+            # materialize-ahead: the planner thread pre-builds upcoming
+            # steps' buffers (stacked rounds under PP) so dispatch never
+            # blocks on materialization; _one_step falls back to building
+            # synchronously when the thread hasn't gotten there yet
+            self.service.attach_materializer(
+                self.materializer,
+                rounds_fn=rounds_splitter(self.ccfg.max_round_waves)
+                if spec.num_stages > 1 else None)
+
+    def serve(self, host: str = "127.0.0.1", port: int = 0) -> str:
+        self.listener = Listener(host, port)
+        return self.listener.address
+
+    def live_handles(self) -> List[WorkerHandle]:
+        return [h for h in self.handles if h.alive]
+
+    def _check_membership(self) -> None:
+        """Raise MembershipChange if ANY registered worker has died —
+        liveness is poll-checked here at every step boundary (and inside
+        `_await`'s wait loop), so a death detected BETWEEN steps triggers
+        recovery too, instead of silently dispatching full-size plans to
+        a shrunken fleet."""
+        for h in self.handles:
+            if not h.alive:
+                raise elastic.MembershipChange(h)
+
+    # -- membership ----------------------------------------------------
+    def wait_for_workers(self) -> None:
+        """Accept ``num_workers`` agents, assign each a contiguous slice
+        of the HDP axis, ship config, wait until every trainer is built
+        (and resumed, when a valid checkpoint exists)."""
+        n = self.ccfg.num_workers
+        per = self.spec.hdp // n
+        resume, state = self._latest_valid_state()
+        self.step = resume
+        if resume:
+            self._load_state(state, rank_map=None)
+        for w in range(n):
+            chan = self.listener.accept(timeout=self.ccfg.accept_timeout)
+            hello = chan.recv()
+            assert hello.get("type") == "hello", hello
+            h = WorkerHandle(w, chan, list(range(w * per, (w + 1) * per)))
+            self.handles.append(h)
+            h.start_reader()
+        for h in self.handles:
+            h.send(self._config_msg(h, resume))
+        for h in self.handles:
+            self._await(h, "ready")
+        self.supervisor.start()
+
+    def _config_msg(self, h: WorkerHandle, resume_step: int) -> dict:
+        c = self.ccfg
+        return {"type": "config", "worker": h.wid, "ranks": h.ranks,
+                "hdp": self.spec.hdp, "num_workers": len(self.handles),
+                "model": self.model_cfg, "dataset": self.ds,
+                "spec": self.spec, "seed": c.seed, "steps": c.steps,
+                "capacity": self.spec.capacity, "tp": c.tp,
+                "runtime_kw": c.runtime_kw, "opt_kw": c.opt_kw,
+                "max_round_waves": c.max_round_waves,
+                "ckpt_dir": c.ckpt_dir, "ckpt_every": c.ckpt_every,
+                "ckpt_owner": 0 in h.ranks,
+                "resume_step": resume_step,
+                "heartbeat_interval": c.heartbeat_interval,
+                "slow_ranks": c.slow_ranks}
+
+    def _await(self, h: WorkerHandle, mtype: str, step: Optional[int] = None
+               ) -> dict:
+        """Next ``mtype`` message from ``h`` (stale step_done from before
+        a reconfig is dropped); raises MembershipChange when ``h`` dies."""
+        while True:
+            try:
+                msg = h.inbox.get(timeout=0.25)
+            except queue.Empty:
+                if not h.alive:
+                    raise elastic.MembershipChange(h)
+                continue
+            if msg is None:
+                raise elastic.MembershipChange(h)
+            if msg.get("type") == mtype and (
+                    step is None or msg.get("step") == step):
+                return msg
+
+    def _latest_valid_state(self):
+        """(resume step, data_state) of the newest integrity-passing
+        checkpoint — (0, {}) when none exists."""
+        res = self.ckpt.latest_valid_state() if self.ckpt else None
+        return res if res else (0, {})
+
+    # -- state (satellite: warm elastic restarts) ----------------------
+    def state_dict(self) -> dict:
+        return {"sched": self.service.state_dict(),
+                "calib": self.calib.state_dict()}
+
+    def _load_state(self, data_state: dict,
+                    rank_map: Optional[List[int]],
+                    src_world: Optional[int] = None) -> None:
+        sched = data_state.get("sched")
+        if sched:
+            self.service.load_state(sched, rank_map=rank_map,
+                                    src_world=src_world)
+        calib = data_state.get("calib")
+        if calib:
+            self.calib.load_state(calib, rank_map=rank_map,
+                                  src_world=src_world)
+
+    # -- step loop -----------------------------------------------------
+    def run(self, on_step: Optional[Callable[["Controller", Dict], None]]
+            = None) -> List[Dict]:
+        """Drive the cluster to ``ccfg.steps``; elastic recovery shrinks
+        membership and resumes from the last valid checkpoint on any
+        worker loss.  ``on_step(controller, rec)`` fires after each
+        completed step (tests use it as a deterministic kill point)."""
+        try:
+            while self.step < self.ccfg.steps:
+                try:
+                    rec = self._one_step()
+                except elastic.MembershipChange:
+                    self.step = elastic.recover(self)
+                    continue
+                self.history.append(rec)
+                if on_step is not None:
+                    on_step(self, rec)
+            self._shutdown_workers()
+        finally:
+            self.stop()
+        return self.history
+
+    def _one_step(self) -> Dict:
+        self._check_membership()      # deaths between steps recover too
+        step = self.step
+        plan, waves = self.service.get_step(step)
+        if self.materializer is not None and waves is None:
+            if self.spec.num_stages > 1:
+                rounds = pipeline_rounds(plan, self.ccfg.max_round_waves)
+                waves = [self.materializer.materialize_round(step, plan, rd)
+                         for rd in rounds]
+            else:
+                waves = [self.materializer.materialize(step, w)
+                         for w in plan.waves]
+        msg = {"type": "plan", "step": step, "plan": plan, "waves": waves,
+               "state": self.state_dict()}
+        live = self.live_handles()
+        if not live:
+            raise elastic.MembershipChange(None)
+        for h in live:
+            if not h.send(msg):
+                raise elastic.MembershipChange(h)
+        dones = {h: self._await(h, "step_done", step=step) for h in live}
+        self._ingest_telemetry(step, plan, dones)
+        rec0 = next(iter(dones.values()))
+        self.step = step + 1
+        return {"step": self.step, "loss": rec0["loss"],
+                "grad_norm": rec0.get("grad_norm"),
+                "waves": len(plan.waves), "hdp": self.spec.hdp,
+                "workers": len(live),
+                "compositions": plan.stats.get("compositions", [])}
+
+    def _ingest_telemetry(self, step: int, plan, dones: Dict) -> None:
+        """Assemble each dispatch's per-worker partial rank timings into
+        one full-vector calibrator observation, seed the template registry
+        with the workers' warm compile keys, and push the updated speeds
+        into future windows."""
+        keys = next(iter(dones.values())).get("keys") or []
+        if keys:
+            self.service.warm_keys(keys)
+        if not self.ccfg.calibrate:
+            return
+        n_dispatch = min((len(m.get("telemetry") or [])
+                          for m in dones.values()), default=0)
+        pp = self.spec.num_stages > 1
+        rounds = pipeline_rounds(plan, self.ccfg.max_round_waves) \
+            if pp else None
+        for i in range(n_dispatch):
+            waves_i = [plan.waves[j] for j in rounds[i].wave_ids] if pp \
+                else [plan.waves[i]]
+            costs = np.sum([np.asarray(w.costs) for w in waves_i], axis=0)
+            recs = [m["telemetry"][i] for m in dones.values()]
+            parts = [(r["ranks"], r["times"]) for r in recs]
+            fresh = any(r["fresh"] for r in recs)
+            exact = all(r.get("exact", False) for r in recs)
+            self.calib.ingest(costs, parts, fresh=fresh, exact=exact,
+                              fit_length=fit_length_of(waves_i))
+        if self.calib.n_observed > 0:
+            self.service.update_rank_speed(self.calib.rank_speed())
+            if self.ccfg.recalibrate_every > 0 \
+                    and (step + 1) % self.ccfg.recalibrate_every == 0:
+                refit = self.calib.coeffs()
+                if refit is not None:
+                    self.service.update_coeffs(refit)
+
+    # -- teardown ------------------------------------------------------
+    def _shutdown_workers(self) -> None:
+        for h in self.live_handles():
+            h.send({"type": "shutdown"})
+        for h in self.live_handles():
+            try:
+                self._await(h, "bye")
+            except elastic.MembershipChange:
+                pass                  # a worker dying during its final
+                                      # checkpoint is the ckpt fallback's
+                                      # problem, not a shutdown failure
+
+    def stop(self) -> None:
+        self.supervisor.stop()
+        self.service.stop()
+        for h in self.handles:
+            h.chan.close()
+        if self.listener is not None:
+            self.listener.close()

@@ -1,0 +1,138 @@
+"""Elastic supervision: failure detection, membership shrink, re-planning.
+
+Running on 12,000+ GPUs means rank loss is routine; the control plane
+survives it in three moves:
+
+1. **Detect.**  A crashed worker surfaces instantly as a channel EOF (the
+   per-worker reader thread marks the handle dead).  Agents send
+   heartbeats every ``heartbeat_interval`` from a dedicated thread;
+   ``heartbeat_timeout`` catches a *frozen agent* (beat thread silent).
+   Because that thread is independent of the step loop, a hung TRAINER
+   keeps beating — so each beat carries the worker's monotonic dispatch
+   counter, and ``progress_timeout`` (opt-in: a legitimate step can be
+   arbitrarily long) declares a worker dead when the counter stalls.
+
+2. **Shrink.**  Surviving workers keep their rank COUNT but are renumbered
+   onto a contiguous 0..hdp'-1 axis (hdp' = Σ surviving slice widths).
+   The scheduler is rebuilt at the new world size: `PlanSpec.replace(hdp=
+   hdp')` re-enters `plan_window`, whose width snapping (`hdp.snap_width`)
+   puts every long-sequence group back onto the *surviving* divisor grid —
+   post-resume plan widths always divide hdp'.  Surviving ranks carry
+   their learned straggler speeds through the rank map; the cross-window
+   load accumulator and old-geometry templates are reset (they describe
+   the dead axis).
+
+3. **Resume.**  The newest checkpoint that passes integrity
+   (`CheckpointManager.latest_valid_step` — a mid-save kill leaves a torn
+   dir that must be skipped, not fatal) names the resume step; survivors
+   rebuild their mesh/trainer at hdp', restore params via the re-sharding
+   restore path, and the controller replays from that step.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+
+class MembershipChange(Exception):
+    """A worker left the cluster mid-step; the step aborts and the
+    controller re-plans on the survivors."""
+
+    def __init__(self, handle=None):
+        self.handle = handle
+        super().__init__(getattr(handle, "reason", "") or "worker lost")
+
+
+class ElasticSupervisor:
+    """Liveness monitor: ``timeout`` bounds silence (no message at all —
+    a frozen agent; crashes are caught faster via EOF), ``progress_
+    timeout`` bounds dispatch-counter stalls (a hung trainer whose beat
+    thread is still alive); 0 disables the progress bound."""
+
+    def __init__(self, controller, timeout: float, interval: float = 0.5,
+                 progress_timeout: float = 0.0):
+        self.controller = controller
+        self.timeout = timeout
+        self.progress_timeout = progress_timeout
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(target=self._monitor, daemon=True)
+        self._thread.start()
+
+    def _monitor(self) -> None:
+        while not self._stop.wait(self.interval):
+            now = time.monotonic()
+            for h in self.controller.live_handles():
+                if now - h.last_seen > self.timeout:
+                    h.mark_dead(
+                        f"heartbeat timeout ({self.timeout:.1f}s)")
+                elif self.progress_timeout > 0 \
+                        and now - h.progress_seen > self.progress_timeout:
+                    h.mark_dead("progress stall "
+                                f"({self.progress_timeout:.1f}s)")
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+
+def recover(controller) -> int:
+    """Shrink membership onto the survivors, rebuild the scheduler at the
+    surviving HDP size, restore controller state from the last valid
+    checkpoint, and reconfigure every surviving worker.  Returns the step
+    to resume from; raises RuntimeError when nobody survived."""
+    ctl = controller
+    survivors = ctl.live_handles()
+    dead = [h for h in ctl.handles if not h.alive]
+    for h in dead:
+        h.chan.close()
+    if not survivors:
+        raise RuntimeError(
+            "control plane lost all workers: "
+            + "; ".join(f"w{h.wid}: {h.reason}" for h in dead))
+
+    # ranks surviving from the PREVIOUS axis, in worker order -> new
+    # contiguous axis; prev_hdp names the world those indices refer to (a
+    # checkpoint from an even older geometry must not be map-indexed)
+    rank_map = [r for h in survivors for r in h.ranks]
+    prev_hdp = ctl.spec.hdp
+    new_hdp = len(rank_map)
+    ctl.handles = survivors
+    cursor = 0
+    for h in survivors:
+        h.ranks = list(range(cursor, cursor + len(h.ranks)))
+        cursor += len(h.ranks)
+
+    # scheduler/calibrator rebuilt at the surviving world size; speeds
+    # follow the surviving ranks (warm restart), plans re-snap onto the
+    # new divisor grid inside plan_window
+    old_service = ctl.service
+    ctl._make_service(ctl.spec.replace(hdp=new_hdp, rank_speed=None))
+    old_service.stop()
+
+    resume, data_state = ctl._latest_valid_state()
+    ctl._load_state(data_state, rank_map=rank_map, src_world=prev_hdp)
+    if ctl.ccfg.calibrate and ctl.calib.n_observed > 0:
+        ctl.service.update_rank_speed(ctl.calib.rank_speed())
+
+    for h in survivors:
+        if not h.send({"type": "reconfig", "hdp": new_hdp,
+                       "ranks": h.ranks, "resume_step": resume,
+                       "ckpt_owner": 0 in h.ranks,
+                       "rank_map": rank_map}):
+            # died during recovery: recurse onto the remaining survivors
+            return recover(ctl)
+    try:
+        for h in survivors:
+            ctl._await(h, "ready")
+    except MembershipChange:
+        return recover(ctl)
+    return resume

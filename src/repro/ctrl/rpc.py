@@ -1,0 +1,125 @@
+"""Length-prefixed TCP RPC for the worker↔controller channel.
+
+Wire format — one frame per message, both directions:
+
+    +----------------+---------------------------+
+    | 4 bytes, ">I"  |  pickled payload          |
+    | payload length |  (protocol 4)             |
+    +----------------+---------------------------+
+
+Messages are plain dicts with a ``"type"`` key (see ctrl/controller.py for
+the message catalogue); payloads may carry numpy arrays and the repo's plan
+dataclasses (StepPlan / Wave / Piece / LoadedWave), which pickle cleanly.
+Pickle is acceptable here for the same reason it is in every training
+launcher: the channel connects processes of ONE job on a trusted cluster
+network — never expose a Listener to untrusted peers.
+
+Threading contract: `Channel.send` is locked (the worker's heartbeat
+thread and its step loop share one socket); `recv` has a single reader per
+channel (the controller runs one reader thread per worker, the worker
+reads only from its agent loop).
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+from typing import Any, Optional, Tuple
+
+_HDR = struct.Struct(">I")
+MAX_FRAME = 1 << 31          # hard sanity bound on one message (2 GiB)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("peer closed the channel")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    payload = pickle.dumps(obj, protocol=4)
+    if len(payload) > MAX_FRAME:
+        raise ValueError(f"frame too large: {len(payload)} bytes")
+    sock.sendall(_HDR.pack(len(payload)) + payload)
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    (n,) = _HDR.unpack(_recv_exact(sock, _HDR.size))
+    if n > MAX_FRAME:
+        raise IOError(f"corrupt frame header: {n} bytes")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+class Channel:
+    """One bidirectional message channel over a connected socket."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._send_lock = threading.Lock()
+
+    def send(self, msg: dict) -> None:
+        with self._send_lock:
+            send_msg(self.sock, msg)
+
+    def recv(self) -> dict:
+        return recv_msg(self.sock)
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+class Listener:
+    """Controller-side accept socket.  ``port=0`` picks a free port."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self.sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.sock.bind((host, port))
+        self.sock.listen(64)
+        self.host, self.port = self.sock.getsockname()[:2]
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def accept(self, timeout: Optional[float] = None) -> Channel:
+        self.sock.settimeout(timeout)
+        conn, _ = self.sock.accept()
+        conn.settimeout(None)
+        return Channel(conn)
+
+    def close(self) -> None:
+        self.sock.close()
+
+
+def connect(address: str, timeout: float = 60.0,
+            retry_interval: float = 0.1) -> Channel:
+    """Worker-side dial with bounded retry (the controller may still be
+    binding when a freshly spawned worker starts)."""
+    import time
+    host, port = parse_address(address)
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            sock = socket.create_connection((host, port), timeout=timeout)
+            sock.settimeout(None)
+            return Channel(sock)
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(retry_interval)
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    host, _, port = address.rpartition(":")
+    return host or "127.0.0.1", int(port)

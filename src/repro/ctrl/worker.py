@@ -1,0 +1,298 @@
+"""Worker agent: wraps the SPMD `Trainer` loop under controller command.
+
+The agent owns a contiguous slice of the global HDP axis.  It builds the
+mesh/Runtime/Trainer from the controller's config message, then drives
+`Trainer.train_step` with plans that arrive over the channel (the
+`RemotePlanClient` below is a `GlobalScheduler`-shaped facade whose
+`get_step` blocks on the wire instead of a planner thread).  After each
+step it reports:
+
+* the step record (loss, grad norm) — the controller's history;
+* its warm compile keys — seed the controller's template registry, the
+  NCCL-group-cache analogue;
+* **per-rank telemetry** (§6.1): for every dispatched wave/round, the wall
+  times of exactly the ranks it owns.  The controller assembles the
+  partial reports from all workers into full per-rank vectors
+  (`OnlineCalibrator.ingest`) — true worker→controller telemetry instead
+  of the single-process trainer's bottleneck attribution.
+
+A dedicated thread heartbeats every ``heartbeat_interval`` so the elastic
+supervisor can distinguish "slow" from "gone".  On RECONFIG (membership
+shrank) the agent tears the trainer down, rebuilds mesh+Runtime at the
+surviving HDP size, restores params through the re-sharding checkpoint
+path, and resumes; on SHUTDOWN the checkpoint owner writes a final
+checkpoint and says goodbye.
+
+Runnable: ``python -m repro.ctrl.worker --addr HOST:PORT`` (the launcher
+sets XLA flags in the child environment before this module imports jax).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import compat
+from repro.ctrl.rpc import Channel, connect
+from repro.launch.mesh import make_pipeline_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import Runtime
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+class Reconfigure(Exception):
+    def __init__(self, msg: dict):
+        self.msg = msg
+        super().__init__("membership reconfig")
+
+
+class Shutdown(Exception):
+    pass
+
+
+class RemotePlanClient:
+    """The worker-side face of the scheduler: plans (and optionally
+    pre-built buffers and the controller's state snapshot) arrive over
+    the channel.  Shaped like `GlobalScheduler` so the Trainer is
+    unchanged; feedback methods are no-ops — calibration is the
+    controller's job, fed by the agent's telemetry stream."""
+
+    def __init__(self, ds, spec, chan: Channel, on_state=None):
+        self.ds = ds
+        self.spec = spec            # Trainer._align_offload may rewrite
+        self.chan = chan
+        self.on_state = on_state
+        self.rank_speed = None
+
+    @property
+    def hdp(self) -> int:
+        return self.spec.hdp
+
+    @property
+    def capacity(self) -> int:
+        return self.spec.capacity
+
+    def get_step(self, step: int):
+        while True:
+            msg = self.chan.recv()
+            mtype = msg.get("type")
+            if mtype == "plan":
+                if msg["step"] < step:
+                    continue        # stale dispatch from before a replay
+                assert msg["step"] == step, (msg["step"], step)
+                if self.on_state is not None:
+                    self.on_state(msg.get("state"))
+                return msg["plan"], msg.get("waves")
+            if mtype == "reconfig":
+                raise Reconfigure(msg)
+            if mtype == "shutdown":
+                raise Shutdown()
+
+    def plan_step(self, step: int):
+        return self.get_step(step)[0]
+
+    def update_rank_speed(self, speed) -> None:
+        pass                        # controller-owned
+
+    def update_coeffs(self, coeffs) -> None:
+        pass
+
+    def stop(self) -> None:
+        pass
+
+
+class WorkerAgent:
+    def __init__(self, address: str, connect_timeout: float = 120.0):
+        self.chan = connect(address, timeout=connect_timeout)
+        self.ranks: List[int] = []
+        self.trainer: Optional[Trainer] = None
+        self._telemetry: List[Dict] = []
+        self._slow_ranks: Optional[Dict[int, float]] = None
+        self._progress = 0           # monotonic dispatch counter carried
+                                     # by heartbeats: the supervisor's
+                                     # hang detection watches it — a hung
+                                     # trainer keeps BEATING (separate
+                                     # thread) but stops PROGRESSING
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------
+    def run(self) -> None:
+        self.chan.send({"type": "hello"})
+        cfg = self.chan.recv()
+        assert cfg.get("type") == "config", cfg
+        self.cfg_msg = cfg
+        self._start_heartbeat(cfg.get("heartbeat_interval", 0.5))
+        try:
+            self._build_trainer(hdp=cfg["hdp"], ranks=cfg["ranks"],
+                                ckpt_owner=cfg["ckpt_owner"],
+                                resume_step=cfg.get("resume_step", 0))
+            self.chan.send({"type": "ready", "step": self.trainer.step})
+            while True:
+                try:
+                    self._step_once()
+                except Reconfigure as rc:
+                    m = rc.msg
+                    self._remap_slow_ranks(m.get("rank_map"))
+                    self._build_trainer(hdp=m["hdp"], ranks=m["ranks"],
+                                        ckpt_owner=m["ckpt_owner"],
+                                        resume_step=m["resume_step"])
+                    self.chan.send({"type": "ready",
+                                    "step": self.trainer.step})
+                except Shutdown:
+                    self._final_checkpoint()
+                    self.chan.send({"type": "bye"})
+                    return
+        finally:
+            self._hb_stop.set()
+            self.chan.close()
+
+    def _start_heartbeat(self, interval: float) -> None:
+        def beat():
+            while not self._hb_stop.wait(interval):
+                try:
+                    self.chan.send({"type": "heartbeat",
+                                    "progress": self._progress})
+                except (OSError, EOFError):
+                    return
+        self._hb_thread = threading.Thread(target=beat, daemon=True)
+        self._hb_thread.start()
+
+    # -- construction --------------------------------------------------
+    def _build_trainer(self, *, hdp: int, ranks: List[int],
+                       ckpt_owner: bool, resume_step: int) -> None:
+        import jax
+        self._progress += 1          # build/rebuild is forward motion
+        cfg = self.cfg_msg
+        if self.trainer is not None and self.trainer.ckpt is not None:
+            # reconfig path: an async save from the pre-shrink trajectory
+            # may still be writing — joining it before the new trainer
+            # (fresh CheckpointManager, same dir) can touch the same
+            # step_<N>/.tmp paths prevents torn or stale-wins races
+            self.trainer.ckpt.wait()
+        self.ranks = list(ranks)
+        spec = cfg["spec"].replace(hdp=hdp, rank_speed=None)
+        tp = int(cfg.get("tp", 1))
+        stages = spec.num_stages
+        need = hdp * tp * max(stages, 1)
+        assert need <= len(jax.devices()), \
+            (need, len(jax.devices()), "worker mesh exceeds local devices "
+             "(launcher sets --xla_force_host_platform_device_count)")
+        if stages > 1:
+            mesh = make_pipeline_mesh(stages, hdp, tp)
+            rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
+                         stage_axis="stage", **cfg.get("runtime_kw", {}))
+        else:
+            mesh = compat.make_mesh((hdp, tp), ("data", "model"),
+                                    axis_types=compat.auto_axis_types(2))
+            rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
+                         **cfg.get("runtime_kw", {}))
+        compat.set_mesh(mesh)
+        client = RemotePlanClient(cfg["dataset"], spec, self.chan,
+                                  on_state=self._on_state)
+        opt = AdamWConfig(**{"total_steps": int(cfg.get("steps", 10)),
+                             **cfg.get("opt_kw", {})})
+        tcfg = TrainerConfig(capacity=spec.capacity,
+                             ckpt_dir=cfg.get("ckpt_dir"),
+                             ckpt_every=int(cfg.get("ckpt_every", 5)),
+                             ckpt_save=bool(ckpt_owner),
+                             max_round_waves=int(
+                                 cfg.get("max_round_waves", 0)),
+                             sched_async=True,   # consume shipped buffers
+                             calibrate=False)    # controller calibrates
+        self.trainer = Trainer(cfg["model"], rt, opt, client, tcfg,
+                               seed=int(cfg.get("seed", 0)))
+        self.trainer.telemetry_fn = self._on_dispatch
+        if self._slow_ranks is None:
+            self._slow_ranks = cfg.get("slow_ranks")
+        self._install_fault_injection(self._slow_ranks)
+        if resume_step:
+            p, o, dstate = self.trainer.ckpt.restore(
+                resume_step, self.trainer.params, self.trainer.opt_state)
+            self.trainer.params, self.trainer.opt_state = p, o
+            self.trainer.step = int(dstate["step"])
+
+    def _remap_slow_ranks(self, rank_map) -> None:
+        """Elastic shrink renumbers the axis: ``rank_map[i]`` is the old
+        global rank now at new rank i.  The drill's slowdown follows the
+        physical rank — keys remap (and compose across repeated
+        shrinks)."""
+        if not self._slow_ranks or not rank_map:
+            return
+        self._slow_ranks = {new: self._slow_ranks[old]
+                            for new, old in enumerate(rank_map)
+                            if old in self._slow_ranks}
+
+    def _install_fault_injection(self, slow_ranks) -> None:
+        """Straggler drill: a fake per-rank clock (rank r runs ``factor``×
+        slower) exercises the telemetry→calibrator→re-plan loop without
+        real slow hardware."""
+        if not slow_ranks:
+            return
+        slow = {int(r): float(f) for r, f in slow_ranks.items()}
+
+        def clock(waves):
+            waves = waves if isinstance(waves, list) else [waves]
+            costs = np.sum([np.asarray(w.costs) for w in waves], axis=0)
+            speed = np.ones_like(costs)
+            for r, f in slow.items():
+                if r < len(speed):
+                    speed[r] = 1.0 / f
+            return costs / speed
+        self.trainer.wave_time_fn = clock
+
+    # -- per-step hooks ------------------------------------------------
+    def _on_state(self, state) -> None:
+        if state is not None:
+            self.trainer.extra_data_state = state
+
+    def _on_dispatch(self, waves, measured, fresh: bool) -> None:
+        """One dispatched wave (or pipelined round): record the wall times
+        of the ranks this worker owns.  A scalar measurement (real wall
+        clock) is this process's local time — attributed to every owned
+        rank, which is exactly what a per-host agent can observe; a vector
+        (fault-injection clock) is sliced to the owned ranks."""
+        self._progress += 1          # hang detection: heartbeats carry it
+        exact = np.ndim(measured) > 0
+        if exact:
+            times = np.asarray(measured, float)[self.ranks]
+        else:
+            times = np.full(len(self.ranks), float(measured))
+        self._telemetry.append({"ranks": list(self.ranks),
+                                "times": [float(t) for t in times],
+                                "exact": exact,   # per-rank clock vs the
+                                                  # wall attributed to
+                                                  # every owned rank
+                                "fresh": bool(fresh)})
+
+    def _step_once(self) -> None:
+        self._telemetry = []
+        rec = self.trainer.train_step()
+        self._progress += 1
+        keys = [k for k in self.trainer._exec_cache if k[0] != "pp"]
+        self.chan.send({"type": "step_done", "step": rec["step"] - 1,
+                        "loss": rec["loss"],
+                        "grad_norm": rec["grad_norm"],
+                        "keys": keys, "telemetry": self._telemetry})
+
+    def _final_checkpoint(self) -> None:
+        tr = self.trainer
+        if tr is not None and tr.ckpt is not None and tr.tcfg.ckpt_save:
+            tr.ckpt.save(tr.step, tr.params, tr.opt_state,
+                         tr.data_state(), block=True)
+            tr.ckpt.wait()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", required=True,
+                    help="controller address, HOST:PORT")
+    ap.add_argument("--connect-timeout", type=float, default=120.0)
+    args = ap.parse_args()
+    WorkerAgent(args.addr, connect_timeout=args.connect_timeout).run()
+
+
+if __name__ == "__main__":
+    main()

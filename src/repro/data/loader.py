@@ -178,6 +178,16 @@ class WaveMaterializer:
         yield from self._prefetched(
             lambda: (self.materialize(step, w) for w in plan.waves))
 
+    def materialize_round(self, step: int, plan: StepPlan,
+                          rd) -> Dict[str, np.ndarray]:
+        """One pipelined round's microbatches stacked to [M, ...] — the
+        round-level analogue of `materialize` (shared by `iter_rounds`'
+        prefetch and the scheduler service's materialize-ahead)."""
+        loaded = [self.materialize(step, plan.waves[i])
+                  for i in rd.wave_ids]
+        return {k: np.stack([lw.batch[k] for lw in loaded])
+                for k in loaded[0].batch}
+
     def iter_rounds(self, step: int, plan: StepPlan,
                     rounds) -> Iterator[Dict[str, np.ndarray]]:
         """Prefetching iterator over pipelined rounds: yields each round's
@@ -186,10 +196,7 @@ class WaveMaterializer:
         `iter_step`)."""
         def produce():
             for rd in rounds:
-                loaded = [self.materialize(step, plan.waves[i])
-                          for i in rd.wave_ids]
-                yield {k: np.stack([lw.batch[k] for lw in loaded])
-                       for k in loaded[0].batch}
+                yield self.materialize_round(step, plan, rd)
         yield from self._prefetched(produce)
 
     def _prefetched(self, produce) -> Iterator:

@@ -1,0 +1,92 @@
+"""Local multi-process control plane: controller in-process, N worker
+subprocesses.
+
+This is the deployment shape of ctrl/ shrunk onto one host so the whole
+plane runs as CPU processes in tests and CI: the controller binds a
+loopback port, each worker is ``python -m repro.ctrl.worker --addr ...``
+spawned with its own XLA environment (host-platform device count is an
+import-time flag, so it must be set in the child's env, never inherited
+from a live jax).  On a pod the same Controller drives one agent per
+host; only the spawn mechanism changes.
+
+    cluster = LocalCluster(controller)
+    cluster.start()
+    history = cluster.run()           # dispatch loop + elastic recovery
+    cluster.shutdown()
+
+``kill_worker`` SIGKILLs a worker subprocess — the deterministic fault
+injection the elastic tests drive through ``on_step``.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+import repro
+from repro.ctrl.controller import Controller
+
+
+def worker_env(num_devices: int, extra: Optional[Dict[str, str]] = None
+               ) -> Dict[str, str]:
+    """Child environment for one worker: forced host-platform device
+    count (set BEFORE the child imports jax), CPU platform, and the repo
+    on PYTHONPATH."""
+    # namespace-package-safe: repro may have no __file__, only __path__
+    pkg_dir = (os.path.dirname(repro.__file__) if repro.__file__
+               else next(iter(repro.__path__)))
+    src = os.path.dirname(os.path.abspath(pkg_dir))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{num_devices}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    if extra:
+        env.update(extra)
+    return env
+
+
+class LocalCluster:
+    def __init__(self, controller: Controller, *,
+                 devices_per_worker: Optional[int] = None,
+                 env: Optional[Dict[str, str]] = None,
+                 python: str = sys.executable):
+        self.controller = controller
+        c = controller.ccfg
+        # every worker emulates the FULL mesh locally (multi-controller
+        # SPMD: one program everywhere; ownership scopes telemetry and
+        # checkpoint writes, not computation)
+        self.devices_per_worker = devices_per_worker or (
+            controller.spec.hdp * c.tp
+            * max(controller.spec.num_stages, 1))
+        self.env = env
+        self.python = python
+        self.procs: List[subprocess.Popen] = []
+
+    def start(self) -> str:
+        addr = self.controller.serve()
+        env = worker_env(self.devices_per_worker, self.env)
+        for _ in range(self.controller.ccfg.num_workers):
+            self.procs.append(subprocess.Popen(
+                [self.python, "-m", "repro.ctrl.worker", "--addr", addr],
+                env=env))
+        return addr
+
+    def run(self, on_step=None) -> List[Dict]:
+        self.controller.wait_for_workers()
+        return self.controller.run(on_step=on_step)
+
+    def kill_worker(self, idx: int, sig: int = signal.SIGKILL) -> None:
+        """Fault injection: hard-kill worker ``idx`` (spawn order)."""
+        self.procs[idx].send_signal(sig)
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        self.controller.stop()
+        for p in self.procs:
+            try:
+                p.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=5.0)

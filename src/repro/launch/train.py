@@ -18,6 +18,56 @@ from repro.parallel.sharding import Runtime, single_device_runtime
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+def _resolve_config(args):
+    """Shared by the single-process and --ctrl paths: the model config
+    (with the --reduced clamps applied to args in place) plus the
+    synthetic dataset for the requested distribution."""
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        args.capacity = min(args.capacity, 512)
+        args.tokens_per_step = min(args.tokens_per_step, 8192)
+        args.context = min(args.context, 2048)
+    dist = DISTRIBUTIONS.get(args.dataset) or \
+        LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, args.tokens_per_step,
+                          args.context)
+    return cfg, ds
+
+
+def _run_ctrl(args):
+    """Distributed control plane: controller here, workers spawned as
+    local subprocesses (launch/cluster.py)."""
+    from repro.core.planner import PlanSpec
+    from repro.ctrl.controller import Controller, ControllerConfig
+    from repro.launch.cluster import LocalCluster
+
+    cfg, ds = _resolve_config(args)
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    hdp, tp = (dims[0], dims[1]) if len(dims) >= 2 else (dims[0], 1)
+    spec = PlanSpec.for_config(cfg, capacity=args.capacity, hdp=hdp,
+                               strategy=args.strategy, use_offload=False)
+    ctl = Controller(ds, cfg, spec, ControllerConfig(
+        num_workers=args.num_workers, steps=args.steps,
+        lookahead=args.lookahead, async_plan=args.sched_async,
+        ship_buffers=args.ship_buffers, ckpt_dir=args.ckpt_dir, tp=tp,
+        heartbeat_interval=args.heartbeat_interval,
+        heartbeat_timeout=args.heartbeat_timeout,
+        max_round_waves=args.max_round_waves,
+        runtime_kw={"remat": "none"}, opt_kw={"lr": args.lr}))
+    cluster = LocalCluster(ctl)
+    addr = cluster.start()
+    print(f"controller at {addr}; {args.num_workers} workers x "
+          f"{hdp}x{tp} mesh", flush=True)
+    try:
+        cluster.run(on_step=lambda _c, r: print(
+            f"step {r['step']:4d} loss {r['loss']:.4f} "
+            f"waves {r['waves']} hdp {r['hdp']} "
+            f"workers {r['workers']}", flush=True))
+    finally:
+        cluster.shutdown()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -50,14 +100,29 @@ def main():
     ap.add_argument("--sched-async", action="store_true",
                     help="plan + materialize upcoming steps on a planner "
                          "thread while the current step executes")
+    ap.add_argument("--ctrl", action="store_true",
+                    help="distributed control plane: run the controller "
+                         "in this process and spawn --num-workers worker "
+                         "agents as subprocesses (repro.ctrl); the mesh "
+                         "arg gives each worker's hdp x model geometry")
+    ap.add_argument("--num-workers", type=int, default=2,
+                    help="worker agent processes (--ctrl); must divide "
+                         "the HDP axis")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5,
+                    help="worker->controller heartbeat cadence, seconds")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
+                    help="declare a silent worker dead after this many "
+                         "seconds (crashes are caught instantly via EOF)")
+    ap.add_argument("--ship-buffers", action="store_true",
+                    help="controller materializes wave buffers and ships "
+                         "them with the plan (paper's remote dataloader); "
+                         "default: workers build buffers from metadata")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-        args.capacity = min(args.capacity, 512)
-        args.tokens_per_step = min(args.tokens_per_step, 8192)
-        args.context = min(args.context, 2048)
+    if args.ctrl:
+        return _run_ctrl(args)
+
+    cfg, ds = _resolve_config(args)
 
     dims = tuple(int(x) for x in args.mesh.split("x"))
     if dims == (1, 1):
@@ -68,10 +133,6 @@ def main():
                      model_axis="model")
     compat.set_mesh(rt.mesh)
 
-    dist = DISTRIBUTIONS.get(args.dataset) or \
-        LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
-    ds = SyntheticDataset(dist, cfg.vocab_size, args.tokens_per_step,
-                          args.context)
     sched = GlobalScheduler(ds, cfg, capacity=args.capacity,
                             hdp=rt.hdp_size, strategy=args.strategy,
                             use_offload=False, lookahead=args.lookahead,

@@ -249,6 +249,14 @@ def pipeline_rounds(plan: StepPlan, max_waves: int = 0) -> List[Round]:
     return out
 
 
+def rounds_splitter(max_waves: int = 0):
+    """``plan -> rounds`` callable with a fixed cap — the ONE round-split
+    contract shared by the pipelined executor and materialize-ahead
+    (SchedulerService.attach_materializer's ``rounds_fn``): pre-built
+    stacked buffers desynchronize silently if the two ever disagree."""
+    return lambda plan: pipeline_rounds(plan, max_waves)
+
+
 def pipeline_schedule_stats(plan: StepPlan, num_stages: int,
                             max_round_waves: int = 0) -> Dict:
     """Analytic lockstep schedule of the pipelined executor.

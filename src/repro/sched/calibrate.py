@@ -40,11 +40,34 @@ Compile-time pollution is the caller's job to exclude: the trainer skips
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Optional, Tuple
+from typing import Deque, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.offload import CostCoeffs
+
+
+def fit_length_of(waves) -> Optional[int]:
+    """A unit-consistent T(s) sample exists only when the dispatch was a
+    single wave whose bottleneck rank ran exactly one whole, unsharded
+    sequence (a packed bin costs Σ T(len_i), a sharded one T(len)/g, a
+    round M·T(s) — all different curves than T(s)).  Shared by the
+    trainer's local observation path and the controller's telemetry
+    ingestion (ctrl/controller.py)."""
+    if len(waves) != 1:
+        return None
+    w = waves[0]
+    r = int(np.argmax(w.costs))
+    width, start = 1, 0
+    for g in w.composition:
+        if start <= r < start + g:
+            width = g
+            break
+        start += g
+    slot = w.slots[r]
+    if width == 1 and len(slot) == 1 and slot[0].start == 0:
+        return slot[0].length
+    return None
 
 _TIE_FRAC = 0.98          # ranks within 2% of the wave max share the blame
 _OUTLIER = 8.0            # drop samples > 8x the running scale (GC, page-in)
@@ -117,6 +140,82 @@ class OnlineCalibrator:
             self._samples.append((int(fit_length), seconds
                                   / self.num_layers / self.fit_time_scale))
         self.n_observed += 1
+
+    # ------------------------------------------------------------------
+    def ingest(self, costs, reports: Iterable[Tuple[Sequence[int],
+                                                    Sequence[float]]], *,
+               fresh: bool = False, exact: bool = True,
+               fit_length: Optional[int] = None) -> None:
+        """Paper §6.1 worker→controller telemetry: assemble per-worker
+        PARTIAL per-rank measurements of one dispatch into a full
+        ``rank_seconds`` vector and observe it.  ``reports`` is an
+        iterable of ``(rank_ids, seconds_per_rank)`` — each worker reports
+        the wall times of exactly the global ranks it owns; ranks no
+        surviving worker covers stay 0 and are excluded from the speed
+        update (`observe`'s active mask).  ``fresh`` marks a dispatch that
+        paid a jit compile on any worker — its wall time says nothing
+        about rank speed, so the whole observation is skipped (same rule
+        as the trainer's local path).
+
+        ``exact=False`` marks reports where a worker attributed ONE wall
+        clock to every rank it owns (all a per-host agent can measure
+        without device timers).  Dividing cost_r by that shared wall
+        would mark every lightly-loaded rank slow on any imbalanced wave,
+        so the observation degrades to the wall-time channel instead —
+        max over reports, bottleneck-blamed (`_TIE_FRAC`), exactly the
+        single-process rule."""
+        if fresh:
+            return
+        rank_seconds = np.zeros(self.hdp)
+        for ranks, times in reports:
+            rank_seconds[np.asarray(list(ranks), int)] = \
+                np.asarray(list(times), float)
+        if exact:
+            self.observe(costs, rank_seconds=rank_seconds,
+                         fit_length=fit_length)
+        else:
+            self.observe(costs,
+                         seconds=float(rank_seconds.max(initial=0.0)),
+                         fit_length=fit_length)
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot (checkpoint ``data_state``): an elastic
+        restart resumes with warm speeds instead of re-learning stragglers
+        from scratch."""
+        return {"speed": [float(s) for s in self._speed],
+                "scale": None if self._scale is None else float(self._scale),
+                "samples": [[int(s), float(t)] for s, t in self._samples],
+                "n_observed": int(self.n_observed)}
+
+    def load_state(self, state: dict,
+                   rank_map: Optional[Sequence[int]] = None,
+                   src_world: Optional[int] = None) -> None:
+        """Restore a snapshot.  ``rank_map[i]`` is the rank — in the
+        world the map was computed over — now occupying new rank i
+        (elastic shrink keeps survivors' learned speeds); ``src_world``
+        names that world's size, and a snapshot from any OTHER world is
+        skipped (a double shrink can outrun checkpointing, leaving the
+        newest snapshot on the pre-previous axis — indexing it with this
+        map would hand survivors other ranks' speeds).  ``rank_map=None``
+        requires matching world sizes and is a no-op on mismatch."""
+        speed = np.asarray(state.get("speed", []), float)
+        if rank_map is not None:
+            idx = np.asarray(list(rank_map), int)
+            if len(idx) != self.hdp or speed.size == 0 \
+                    or idx.max(initial=-1) >= speed.size \
+                    or (src_world is not None and speed.size != src_world):
+                return
+            self._speed = speed[idx].copy()
+        else:
+            if speed.size != self.hdp:
+                return
+            self._speed = speed.copy()
+        self._scale = state.get("scale")
+        self._samples = deque(((int(s), float(t))
+                               for s, t in state.get("samples", [])),
+                              maxlen=self._samples.maxlen)
+        self.n_observed = int(state.get("n_observed", 0))
 
     # ------------------------------------------------------------------
     def rank_speed(self) -> np.ndarray:

@@ -53,6 +53,7 @@ class SchedulerService:
         self._waves: Dict[int, List] = {}
         self._warm_pending: List[Tuple] = []
         self._materializer = None
+        self._rounds_fn = None
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         # every plan_window call serializes on this: the template registry
@@ -70,11 +71,20 @@ class SchedulerService:
         self._thread: Optional[threading.Thread] = None
 
     # -- configuration -------------------------------------------------
-    def attach_materializer(self, materializer) -> None:
+    def attach_materializer(self, materializer, rounds_fn=None) -> None:
         """Enable materialize-ahead: the planner thread pre-builds each
-        planned step's wave buffers (WaveMaterializer.materialize)."""
+        planned step's wave buffers (WaveMaterializer.materialize).
+
+        ``rounds_fn(plan) -> rounds`` switches to the PIPELINED product:
+        instead of per-wave buffers the thread pre-builds each round's
+        stacked ``[M, ...]`` microbatch buffers
+        (WaveMaterializer.materialize_round), so PP runs get the same
+        async prefetch as the non-PP path.  The callable must reproduce
+        exactly the executor's round split (the trainer passes
+        ``pipeline_rounds(plan, max_round_waves)``)."""
         with self._cv:
             self._materializer = materializer
+            self._rounds_fn = rounds_fn
             self._cv.notify_all()
 
     def warm_keys(self, keys) -> None:
@@ -95,6 +105,77 @@ class SchedulerService:
     def update_coeffs(self, coeffs) -> None:
         with self._cv:
             self.spec = self.spec.replace(coeffs=coeffs)
+
+    # -- persistence (checkpoint data_state) ---------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe scheduler state: straggler weights, the cross-window
+        load accumulator, the composition-template registry and the
+        blended CostCoeffs — everything an elastic restart needs to
+        resume planning warm instead of re-learning from scratch.
+        Takes ``_plan_lock`` (then ``_cv`` — the established order):
+        templates and load are mutated by the planner thread under
+        ``_plan_lock``, so a ``_cv``-only snapshot could tear or hit a
+        dict-changed-size-during-iteration."""
+        with self._plan_lock, self._cv:
+            c = self.spec.coeffs
+            return {
+                "hdp": int(self.spec.hdp),
+                "rank_speed": None if self.rank_speed is None
+                else [float(s) for s in self.rank_speed],
+                "load": [float(x) for x in self.load],
+                "templates": [[list(widths), int(c_mult), list(comp)]
+                              for (widths, c_mult), comp
+                              in self.templates.items()],
+                "coeffs": [float(c.a1), float(c.b1), float(c.g),
+                           float(c.a2), float(c.b2)],
+            }
+
+    def load_state(self, state: dict,
+                   rank_map: Optional[List[int]] = None,
+                   src_world: Optional[int] = None) -> None:
+        """Restore a `state_dict` snapshot.  Identity restore (``rank_map
+        is None``) requires the state's hdp to match and reloads
+        everything.  With ``rank_map`` (elastic shrink: ranks of the
+        ``src_world``-sized previous axis now occupying new ranks
+        0..hdp-1) the per-rank SPEEDS follow the surviving ranks, while
+        the load accumulator resets and templates that no longer tile
+        the new axis are dropped — both describe the dead geometry, not
+        the survivors.  A snapshot whose hdp is neither the new world
+        (identity) nor ``src_world`` (the axis the map indexes) keeps
+        only its coeffs: a double shrink can outrun checkpointing, and
+        misapplying the map would assign survivors other ranks'
+        speeds."""
+        from repro.core.offload import CostCoeffs
+        with self._plan_lock:           # order: _plan_lock before _cv
+            with self._cv:
+                coeffs = state.get("coeffs")
+                if coeffs is not None:
+                    self.spec = self.spec.replace(coeffs=CostCoeffs(*coeffs))
+                speed = state.get("rank_speed")
+                hdp = self.spec.hdp
+                if rank_map is None:
+                    if state.get("hdp") != hdp:
+                        return          # stale geometry: coeffs only
+                    if speed is not None and len(speed) == hdp:
+                        self.rank_speed = np.asarray(speed, float)
+                    load = state.get("load")
+                    if load is not None and len(load) == hdp:
+                        self.load = np.asarray(load, float)
+                    items = state.get("templates", [])
+                else:
+                    idx = list(rank_map)
+                    world_ok = src_world is None \
+                        or state.get("hdp") == src_world
+                    if world_ok and speed is not None and len(idx) == hdp \
+                            and max(idx, default=-1) < len(speed):
+                        self.rank_speed = np.asarray(
+                            [speed[i] for i in idx], float)
+                    self.load = np.zeros(hdp)
+                    items = state.get("templates", [])
+                for widths, c_mult, comp in items:
+                    if sum(comp) == hdp:
+                        self.templates.setdefault(
+                            (tuple(widths), int(c_mult)), tuple(comp))
 
     # -- planning ------------------------------------------------------
     def _window_start(self, step: int) -> int:
@@ -155,6 +236,7 @@ class SchedulerService:
                     t0 = self._window_start(self._planned_until)
                     mat_step = self._next_mat_step_locked()
                     materializer = self._materializer
+                    rounds_fn = self._rounds_fn
                     mat_plan = self._plans.get(mat_step) \
                         if mat_step is not None else None
                 if need_plan:
@@ -168,8 +250,13 @@ class SchedulerService:
                                                   t0 + self.lookahead)
                         self._cv.notify_all()
                 elif mat_plan is not None and materializer is not None:
-                    waves = [materializer.materialize(mat_step, w)
-                             for w in mat_plan.waves]
+                    if rounds_fn is not None:   # pipelined: stacked [M,...]
+                        waves = [materializer.materialize_round(
+                                     mat_step, mat_plan, rd)
+                                 for rd in rounds_fn(mat_plan)]
+                    else:
+                        waves = [materializer.materialize(mat_step, w)
+                                 for w in mat_plan.waves]
                     with self._cv:
                         if mat_step > self._cursor:
                             # the consumer moved past this step while it

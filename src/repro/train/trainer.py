@@ -33,13 +33,14 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
-from repro.sched.calibrate import OnlineCalibrator
+from repro.sched.calibrate import OnlineCalibrator, fit_length_of
 from repro.models.transformer import init_params
 from repro.optim import adamw
 from repro.parallel.pipeline import (assert_pipeline_ready,
                                      make_pipeline_grad_step,
                                      pipeline_rounds,
-                                     pipeline_schedule_stats)
+                                     pipeline_schedule_stats,
+                                     rounds_splitter)
 from repro.parallel.sharding import Runtime
 from repro.train.train_step import make_accum_steps
 
@@ -73,6 +74,11 @@ class TrainerConfig:
                                      # async/sync parity setting)
     recalibrate_every: int = 8       # refit Eq. 3 CostCoeffs from measured
                                      # times every N steps (0 = never)
+    ckpt_save: bool = True           # False: restore-only (every ctrl
+                                     # worker restores from the shared
+                                     # dir, but only the rank-0 owner may
+                                     # write — two processes renaming the
+                                     # same step dir would race)
 
 
 class Trainer:
@@ -104,16 +110,36 @@ class Trainer:
         self.calib = OnlineCalibrator(
             scheduler.spec.coeffs, rt.hdp_size, cfg.num_layers,
             quadratic=scheduler.spec.quadratic, ema=tcfg.straggler_ema)
-        self.wave_time_fn = None     # test hook: fake per-wave clock
+        self.wave_time_fn = None     # DEPRECATED fake-clock hook: replaces
+                                     # the measured dispatch time (scalar
+                                     # wall or per-rank vector).  New code
+                                     # should run under the control plane
+                                     # (repro.ctrl), where workers stream
+                                     # true per-rank telemetry; the hook
+                                     # stays for single-process tests.
+        self.telemetry_fn = None     # ctrl-worker hook: called with
+                                     # (waves, measured, fresh) for every
+                                     # dispatch, regardless of tcfg
+                                     # .calibrate — the agent streams it
+                                     # to the controller (§6.1)
+        self.extra_data_state = None  # ctrl-worker hook: controller-owned
+                                      # scheduler/calibrator state merged
+                                      # into checkpoint data_state
         self._clock = time.perf_counter
-        if tcfg.sched_async and not self.pipelined \
-                and hasattr(scheduler, "service"):
-            # materialize-ahead: the planner thread pre-builds upcoming
-            # steps' wave buffers (the pipelined path keeps iter_rounds'
-            # own prefetch — rounds stack waves differently)
-            scheduler.service.attach_materializer(self.loader)
+        self._attach_materializer(scheduler)
 
     # ------------------------------------------------------------------
+    def _attach_materializer(self, scheduler) -> None:
+        """Materialize-ahead: the planner thread pre-builds upcoming
+        steps' buffers — per-wave buffers on the non-PP path, stacked
+        [M, ...] round buffers on the pipelined path (`rounds_splitter`
+        is the one round-split contract shared with the executor)."""
+        if self.tcfg.sched_async and hasattr(scheduler, "service"):
+            scheduler.service.attach_materializer(
+                self.loader,
+                rounds_fn=rounds_splitter(self.tcfg.max_round_waves)
+                if self.pipelined else None)
+
     def _align_offload(self, scheduler: GlobalScheduler):
         """Keep plan and execution consistent: when waves cannot offload
         (no host memory space, or disabled in the TrainerConfig), the
@@ -160,15 +186,46 @@ class Trainer:
         return self._exec_cache[key], fresh
 
     def resume_if_possible(self):
+        """Resume from the newest checkpoint that passes integrity —
+        a corrupt/torn newest dir (mid-save kill) falls back to the last
+        good one instead of raising.  Scheduler/calibrator state saved in
+        ``data_state`` restores warm (straggler speeds, templates, blended
+        coeffs) when the world size still matches."""
         if self.ckpt is None:
             return False
-        latest = self.ckpt.latest_step()
-        if latest is None:
+        res = self.ckpt.restore_latest(self.params, self.opt_state)
+        if res is None:
             return False
-        self.params, self.opt_state, data_state = self.ckpt.restore(
-            latest, self.params, self.opt_state)
+        _, self.params, self.opt_state, data_state = res
         self.step = int(data_state["step"])
+        self.load_ctrl_state(data_state)
         return True
+
+    def data_state(self) -> Dict:
+        """Checkpoint data_state: the step cursor plus the scheduling
+        brain's warm state.  Under the control plane the worker saves the
+        CONTROLLER's state (shipped with each plan — `extra_data_state`);
+        single-process runs save their own service/calibrator."""
+        ds: Dict = {"step": self.step}
+        if self.extra_data_state is not None:
+            ds.update(self.extra_data_state)
+            return ds
+        ds["calib"] = self.calib.state_dict()
+        if hasattr(self.sched, "service"):
+            ds["sched"] = self.sched.service.state_dict()
+        return ds
+
+    def load_ctrl_state(self, data_state: Dict) -> None:
+        """Warm-start the calibrator and scheduler service from a
+        checkpoint's data_state (no-ops on geometry mismatch)."""
+        calib_state = data_state.get("calib")
+        if calib_state:
+            self.calib.load_state(calib_state)
+        sched_state = data_state.get("sched")
+        if sched_state and hasattr(self.sched, "service"):
+            self.sched.service.load_state(sched_state)
+            if self.tcfg.calibrate and self.calib.n_observed > 0:
+                self.sched.update_rank_speed(self.calib.rank_speed())
 
     def resize(self, new_hdp_scheduler: GlobalScheduler):
         """Elastic rescale: params/opt are HDP-replicated; only the plan
@@ -184,45 +241,26 @@ class Trainer:
             new_hdp_scheduler.spec.coeffs, new_hdp_scheduler.hdp,
             self.cfg.num_layers, quadratic=new_hdp_scheduler.spec.quadratic,
             ema=self.tcfg.straggler_ema)
-        if self.tcfg.sched_async and not self.pipelined \
-                and hasattr(new_hdp_scheduler, "service"):
-            new_hdp_scheduler.service.attach_materializer(self.loader)
+        self._attach_materializer(new_hdp_scheduler)
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _fit_length(waves) -> Optional[int]:
-        """A unit-consistent T(s) sample exists only when the dispatch was
-        a single wave whose bottleneck rank ran exactly one whole,
-        unsharded sequence (a packed bin costs Σ T(len_i), a sharded one
-        T(len)/g, a round M·T(s) — all different curves than T(s))."""
-        if len(waves) != 1:
-            return None
-        w = waves[0]
-        r = int(np.argmax(w.costs))
-        width, start = 1, 0
-        for g in w.composition:
-            if start <= r < start + g:
-                width = g
-                break
-            start += g
-        slot = w.slots[r]
-        if width == 1 and len(slot) == 1 and slot[0].start == 0:
-            return slot[0].length
-        return None
-
     def _observe(self, waves, measured, fresh_compile: bool):
         """Feed one measured dispatch (a wave, or a pipelined round's
-        waves) to the calibrator.  ``measured`` is the SPMD wall time
-        (float) or a per-rank time vector (worker telemetry — the
-        `wave_time_fn` test/deployment hook can supply it).  Skip
-        dispatches that paid a jit compile — their wall time says nothing
-        about rank speed."""
+        waves) to the telemetry hook and the local calibrator.
+        ``measured`` is the SPMD wall time (float) or a per-rank time
+        vector (the deprecated `wave_time_fn` fake clock can supply it).
+        The telemetry hook (ctrl worker agent) sees EVERY dispatch —
+        compile-pollution filtering is the controller's call via the
+        ``fresh`` flag; the local calibrator keeps skipping fresh
+        compiles itself."""
+        if self.telemetry_fn is not None:
+            self.telemetry_fn(waves, measured, fresh_compile)
         if fresh_compile or not self.tcfg.calibrate:
             return
         costs = np.zeros(self.sched.hdp)
         for w in waves:
             costs += np.asarray(w.costs)
-        kw = dict(fit_length=self._fit_length(waves))
+        kw = dict(fit_length=fit_length_of(waves))
         if np.ndim(measured) > 0:
             self.calib.observe(costs, rank_seconds=measured, **kw)
         else:
@@ -244,11 +282,14 @@ class Trainer:
             # waves, each round one wavefront schedule (parallel/pipeline);
             # round r+1 materializes in the background while r executes
             rounds = pipeline_rounds(plan, self.tcfg.max_round_waves)
-            # driven off the prefetch iterator (not zip) so it drains
-            # fully — its epilogue joins the producer thread and re-raises
-            # any captured producer error
-            for i, stacked in enumerate(self.loader.iter_rounds(
-                    self.step, plan, rounds)):
+            # pre_waves: stacked [M, ...] round buffers the scheduler
+            # service pre-built (materialize-ahead; its rounds_fn mirrors
+            # this split).  Fallback is the prefetch iterator, driven
+            # directly (not zip) so it drains fully — its epilogue joins
+            # the producer thread and re-raises any captured error
+            round_iter = iter(pre_waves) if pre_waves is not None \
+                else self.loader.iter_rounds(self.step, plan, rounds)
+            for i, stacked in enumerate(round_iter):
                 rd = rounds[i]
                 batch = {k: jnp.asarray(v) for k, v in stacked.items()}
                 batch["denom"] = jnp.float32(denom)
@@ -309,16 +350,17 @@ class Trainer:
                "grad_norm": float(om["grad_norm"]),
                "wall_s": time.time() - t0, **rec_extra}
         self.history.append(rec)
-        if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+        if self.ckpt and self.tcfg.ckpt_save \
+                and self.step % self.tcfg.ckpt_every == 0:
             self.ckpt.save(self.step, self.params, self.opt_state,
-                           {"step": self.step})
+                           self.data_state())
         return rec
 
     def run(self, steps: Optional[int] = None):
         n = steps if steps is not None else self.tcfg.steps
         for _ in range(n):
             yield self.train_step()
-        if self.ckpt:
+        if self.ckpt and self.tcfg.ckpt_save:
             self.ckpt.save(self.step, self.params, self.opt_state,
-                           {"step": self.step}, block=True)
+                           self.data_state(), block=True)
             self.ckpt.wait()

@@ -48,6 +48,53 @@ def test_partial_checkpoint_invisible(tmp_path):
     assert mgr.latest_step() == 3
 
 
+def _corrupt(tmp_path, step):
+    npz = tmp_path / f"step_{step}" / "arrays.npz"
+    data = bytearray(npz.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    npz.write_bytes(bytes(data))
+
+
+def test_restore_latest_falls_back_past_corrupt(tmp_path):
+    """Elastic-restart case: the newest checkpoint is damaged (mid-save
+    kill / bit rot) — restore_latest must fall back to the newest one
+    that passes integrity instead of raising at the first corrupt dir."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    params, opt = _tree(0), _tree(1)
+    mgr.save(2, params, opt, {"step": 2, "tag": "good"})
+    mgr.save(4, params, opt, {"step": 4})
+    _corrupt(tmp_path, 4)
+    assert mgr.latest_step() == 4          # still *visible*...
+    assert mgr.latest_valid_step() == 2    # ...but not *valid*
+    step, p2, o2, ds = mgr.restore_latest(params, opt)
+    assert step == 2 and ds["tag"] == "good"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)
+    # explicit-step restore keeps raising loudly on the damaged one
+    with pytest.raises(IOError):
+        mgr.restore(4, params, opt)
+
+
+def test_restore_latest_none_when_all_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    params, opt = _tree(0), _tree(1)
+    assert mgr.restore_latest(params, opt) is None     # empty dir
+    mgr.save(1, params, opt, {"step": 1})
+    _corrupt(tmp_path, 1)
+    assert mgr.latest_valid_step() is None
+    assert mgr.restore_latest(params, opt) is None
+    assert mgr.read_data_state(1) is None
+
+
+def test_read_data_state_without_arrays(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    params, opt = _tree(0), _tree(1)
+    mgr.save(3, params, opt, {"step": 3, "sched": {"hdp": 4}})
+    ds = mgr.read_data_state(3)
+    assert ds["sched"]["hdp"] == 4
+
+
 def test_gc_keeps_last(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep_last=2, async_save=False)
     params, opt = _tree(0), _tree(1)

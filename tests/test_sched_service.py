@@ -76,6 +76,42 @@ def test_materialize_ahead_futures_match_direct():
         svc.stop()
 
 
+def test_materialize_ahead_rounds_match_direct():
+    """Pipelined materialize-ahead (ROADMAP follow-up): with a rounds_fn
+    attached, the planner thread pre-builds stacked [M, ...] round
+    buffers byte-identical to `WaveMaterializer.materialize_round`."""
+    from repro.parallel.pipeline import pipeline_rounds
+    ds, svc = _mk(async_plan=True)
+    mat = WaveMaterializer(ds, CFG, capacity=512)
+
+    def rounds_fn(plan):
+        return pipeline_rounds(plan, 0)
+
+    svc.attach_materializer(mat, rounds_fn=rounds_fn)
+    try:
+        import time
+        svc.get_step(0)               # worker pre-builds step 1's rounds
+        for _ in range(250):
+            with svc._cv:
+                ready = 1 in svc._waves
+            if ready:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.skip("materializer thread starved (loaded CI host)")
+        plan, rounds_built = svc.get_step(1)
+        direct = [mat.materialize_round(1, plan, rd)
+                  for rd in rounds_fn(plan)]
+        assert len(rounds_built) == len(direct) > 0
+        for got, want in zip(rounds_built, direct):
+            assert set(got) == set(want)
+            for k in want:
+                assert got[k].shape[0] == want[k].shape[0]  # [M, ...]
+                np.testing.assert_array_equal(got[k], want[k])
+    finally:
+        svc.stop()
+
+
 def test_planner_thread_errors_surface():
     """An exception inside the planner thread re-raises at the consumer's
     next call instead of hanging or vanishing."""
@@ -151,6 +187,38 @@ def test_stop_unblocks_and_rejects_consumers():
     with pytest.raises(RuntimeError, match="stopped"):
         svc.plan_step(1)
     stall.set()                            # let the daemon thread drain
+
+
+def test_service_state_roundtrip_and_elastic_shrink():
+    """state_dict survives the checkpoint manifest's JSON encoding and
+    restores warm (speeds/load/templates/coeffs); an elastic shrink via
+    rank_map keeps survivors' speeds, resets the load accumulator and
+    drops templates that no longer tile the surviving axis."""
+    import json
+    _, svc = _mk(async_plan=False, lookahead=2, hdp=4)
+    svc.plan_step(0)
+    svc.plan_step(2)
+    svc.update_rank_speed(np.array([1.0, 1.0, 0.5, 1.0]))
+    state = json.loads(json.dumps(svc.state_dict()))   # manifest round trip
+    # identity restore (same geometry)
+    _, svc2 = _mk(async_plan=False, lookahead=2, hdp=4)
+    svc2.load_state(state)
+    np.testing.assert_array_equal(svc2.rank_speed, [1.0, 1.0, 0.5, 1.0])
+    np.testing.assert_array_equal(svc2.load, svc.load)
+    assert svc2.templates == svc.templates and svc.templates
+    assert svc2.spec.coeffs == svc.spec.coeffs
+    # shrink: survivors are old ranks [2, 3]
+    _, svc3 = _mk(async_plan=False, lookahead=2, hdp=2)
+    svc3.load_state(state, rank_map=[2, 3])
+    np.testing.assert_array_equal(svc3.rank_speed, [0.5, 1.0])
+    assert np.all(svc3.load == 0)
+    assert all(sum(comp) == 2 for comp in svc3.templates.values())
+    p = svc3.plan_step(0)              # and planning still works
+    assert p.denom > 0
+    # geometry mismatch without a rank map: per-rank state is ignored
+    _, svc4 = _mk(async_plan=False, lookahead=2, hdp=2)
+    svc4.load_state(state)
+    assert svc4.rank_speed is None
 
 
 def test_pp_offload_ratio_survives_harmonization():

@@ -245,26 +245,28 @@ def test_calibrator_refits_coeffs_from_measurements():
     assert fitted.a2 == SPEC.coeffs.a2      # Act(s) never refit from time
 
 
-def test_trainer_fit_length_accepts_only_whole_unsharded_sequences():
+def test_fit_length_accepts_only_whole_unsharded_sequences():
     """Unit-consistency gate for the refit: single wave + width-1
     bottleneck + one piece from position 0 -> its length; packed bins,
-    sharded groups and multi-wave rounds -> None."""
+    sharded groups and multi-wave rounds -> None.  (`fit_length_of` is
+    shared by the trainer's local path and the controller's telemetry
+    ingestion — sched/calibrate.py.)"""
     from repro.core.hdp import Piece, Wave
-    from repro.train.trainer import Trainer
+    from repro.sched.calibrate import fit_length_of
 
     whole = Wave(composition=(1, 1), slots=[[Piece(0, 0, 100)], []],
                  costs=[1.0, 0.0])
-    assert Trainer._fit_length([whole]) == 100
+    assert fit_length_of([whole]) == 100
     packed = Wave(composition=(1, 1),
                   slots=[[Piece(0, 0, 60), Piece(1, 0, 40)], []],
                   costs=[1.0, 0.0])
-    assert Trainer._fit_length([packed]) is None
+    assert fit_length_of([packed]) is None
     sharded = Wave(composition=(2,),
                    slots=[[Piece(0, 0, 50), Piece(0, 150, 200)],
                           [Piece(0, 50, 150)]],
                    costs=[1.0, 1.0])
-    assert Trainer._fit_length([sharded]) is None
-    assert Trainer._fit_length([whole, whole]) is None  # a round
+    assert fit_length_of([sharded]) is None
+    assert fit_length_of([whole, whole]) is None  # a round
 
 
 def test_calibrator_skips_compile_outliers():
