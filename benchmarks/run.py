@@ -9,8 +9,11 @@ lookahead-scheduler snapshot (per-step vs window planning: window
 makespan, distinct compile keys, plan latency; see
 benchmarks/scheduler_bench.py) — and ``BENCH_kernels.json`` — the
 kernel-throughput snapshot (local + ring attention tokens/s, Pallas
-interpret vs jnp oracle; see benchmarks/kernel_bench.py) — so the repo's
-perf trajectory is recorded in-tree.
+interpret vs jnp oracle; see benchmarks/kernel_bench.py) — and
+``BENCH_serve.json`` — the serving snapshot (continuous vs static
+admission on a Poisson bimodal mix: latency p50/p99, tok/s, makespan;
+see benchmarks/serve_bench.py) — so the repo's perf trajectory is
+recorded in-tree.
 """
 from __future__ import annotations
 
@@ -116,6 +119,14 @@ def main() -> None:
     except Exception as e:
         rows.append(("benchmarks.scheduler_bench.ERROR", 0.0, repr(e)[:120]))
         sys.stderr.write(f"[scheduler_snapshot] FAILED: {e!r}\n")
+    try:
+        from benchmarks import serve_bench
+        rows.extend(serve_bench.run())
+        sys.stderr.write(
+            f"[serve_snapshot] -> {serve_bench.SNAPSHOT_PATH}\n")
+    except Exception as e:
+        rows.append(("benchmarks.serve_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[serve_snapshot] FAILED: {e!r}\n")
     try:
         from benchmarks import ctrl_bench
         rows.extend(ctrl_bench.run())

@@ -1,48 +1,66 @@
-"""Batched decoding demo: prefill-free autoregressive generation with the
-sharded-cache decode path (flash-decoding combine on real hardware).
+"""Serving demo: continuous batching on the HDP planner.
 
-    PYTHONPATH=src python examples/serve.py --arch gemma2-9b --tokens 32
+A ServeEngine takes a stream of mixed-length prompts, plans prefill
+waves with the same `core.planner.plan` the trainer uses (long prompts
+CP-sharded, short ones packed), hands the prefill KV into a fixed decode
+slab, and decodes every live request one token per wave — admitting new
+arrivals into slots the moment they free.
+
+    PYTHONPATH=src python examples/serve.py --arch llama3.2-3b --reqs 6
+
+For the multi-process shape (controller as request router, workers as
+engines) see `repro.ctrl.controller.Controller.run_serve` and
+`repro.serve.router.ServeClient`.
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
 from repro.configs.registry import get_config
 from repro.models.transformer import init_params
 from repro.parallel.sharding import single_device_runtime
-from repro.train.serve_step import init_decode_cache, make_decode_step
+from repro.serve import ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-9b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--reqs", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--context", type=int, default=96)
+    ap.add_argument("--tokens", type=int, default=12)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     rt = single_device_runtime(remat="none")
     compat.set_mesh(rt.mesh)
     params = init_params(jax.random.PRNGKey(0), cfg, rt)
-    b, horizon = args.batch, args.tokens
-    cache = init_decode_cache(cfg, rt, b, horizon)
-    step = jax.jit(make_decode_step(cfg, rt, b, horizon),
-                   static_argnames=())
+    eng = ServeEngine(params, cfg, rt,
+                      ServeConfig(max_slots=args.slots,
+                                  max_context=args.context,
+                                  prefill_capacity=args.context))
 
     rng = np.random.RandomState(0)
-    tok = jnp.array(rng.randint(0, cfg.vocab_size, b))
-    outs = []
-    for i in range(horizon):
-        logits, cache = step(params, cache, tok, jnp.int32(i))
-        tok = jnp.argmax(logits, axis=-1)
-        outs.append(np.asarray(tok))
-    gen = np.stack(outs, 1)
-    print(f"{cfg.name}: generated {gen.shape} token grid")
-    for row in gen[:2]:
-        print("  ", row[:16], "...")
+    rids = []
+    for i in range(args.reqs):
+        plen = int(rng.randint(4, args.context - args.tokens))
+        rids.append(eng.submit(rng.randint(0, cfg.vocab_size, plen),
+                               args.tokens))
+    eng.drain(max_steps=10_000)
+
+    print(f"{cfg.name}: served {len(rids)} requests "
+          f"({eng.stats['prefill_waves']} prefill waves, "
+          f"{eng.stats['decode_waves']} decode waves, "
+          f"{eng.stats['compiled_compositions']} compositions compiled)")
+    for rid in rids:
+        r = eng.pool.get(rid)
+        ttft = (r.t_first - r.t_submit) * 1e3
+        e2e = (r.t_done - r.t_submit) * 1e3
+        print(f"  req {rid}: plen={r.plen:3d} -> {len(r.generated):3d} tok  "
+              f"ttft={ttft:7.1f}ms  e2e={e2e:8.1f}ms  "
+              f"tokens[:8]={r.generated[:8]}")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,12 @@ class ControllerConfig:
     # fake per-rank clock on the owning worker (validates the straggler
     # feedback loop end-to-end; tests and gamedays)
     slow_ranks: Optional[Dict[int, float]] = None
+    # serve mode: ServeConfig kwargs for each worker's engine (see
+    # repro/serve/engine.py).  Non-None switches the cluster from the
+    # training step loop to request serving: workers build a ServeEngine
+    # instead of a Trainer, and `run_serve` routes client requests
+    # (serve/router.py wire format) instead of dispatching plans.
+    serve: Optional[Dict] = None
 
 
 class WorkerHandle:
@@ -147,6 +153,38 @@ class WorkerHandle:
         except (OSError, EOFError) as e:
             self.mark_dead(f"send failed: {e!r}")
             return False
+
+
+class ClientHandle:
+    """Controller-side state for one connected serve client (a peer that
+    opened with ``client_hello``; see serve/router.py for the wire
+    format).  Its reader thread feeds parsed submits into the router's
+    central queue."""
+
+    def __init__(self, cid: int, chan: Channel, submits: "queue.Queue"):
+        self.cid = cid
+        self.chan = chan
+        self.alive = True
+
+        def reader():
+            try:
+                while True:
+                    msg = self.chan.recv()
+                    if msg.get("type") == "submit":
+                        submits.put((self, msg))
+            except (EOFError, OSError):
+                self.alive = False
+        self._thread = threading.Thread(target=reader, daemon=True)
+        self._thread.start()
+
+    def send(self, msg: dict) -> None:
+        try:
+            self.chan.send(msg)
+        except (OSError, EOFError):
+            self.alive = False
+
+    def close(self) -> None:
+        self.chan.close()
 
 
 class Controller:
@@ -245,7 +283,7 @@ class Controller:
                 "ckpt_owner": 0 in h.ranks,
                 "resume_step": resume_step,
                 "heartbeat_interval": c.heartbeat_interval,
-                "slow_ranks": c.slow_ranks}
+                "slow_ranks": c.slow_ranks, "serve": c.serve}
 
     def _await(self, h: WorkerHandle, mtype: str, step: Optional[int] = None
                ) -> dict:
@@ -371,6 +409,124 @@ class Controller:
                 refit = self.calib.coeffs()
                 if refit is not None:
                     self.service.update_coeffs(refit)
+
+    # -- serving (request router) --------------------------------------
+    def run_serve(self, stop: Optional[threading.Event] = None,
+                  poll: float = 0.02) -> List[Dict]:
+        """Route client requests to serve workers until ``stop`` is set
+        (or `stop_serving` is called).
+
+        The controller reuses its listener and framed protocol as the
+        request router: an acceptor thread admits clients (they open
+        with ``client_hello`` where workers said ``hello``), every
+        submit gets a global request id and goes to the live worker
+        with the fewest requests in flight, and each worker result is
+        forwarded back to the submitting client tagged with its
+        correlation id.  A worker death (channel EOF, or the elastic
+        supervisor's heartbeat/progress timeouts) re-routes its
+        in-flight requests to the survivors — clients never see the
+        failure.  Returns ``request_log``, the per-request telemetry
+        records (engine timings + routing info)."""
+        assert self.ccfg.serve is not None, \
+            "serve mode needs ControllerConfig.serve"
+        self._stop_serve = stop if stop is not None else threading.Event()
+        submits: "queue.Queue" = queue.Queue()
+        clients: List[ClientHandle] = []
+        inflight: Dict[int, Dict] = {}   # rid -> routing entry
+        self.request_log: List[Dict] = []
+        next_rid = 0
+
+        def acceptor():
+            cid = 0
+            while not self._stop_serve.is_set():
+                try:
+                    chan = self.listener.accept(timeout=0.5)
+                    hello = chan.recv()
+                except (OSError, EOFError):
+                    continue             # accept timeout / listener gone
+                if hello.get("type") != "client_hello":
+                    chan.close()
+                    continue
+                clients.append(ClientHandle(cid, chan, submits))
+                cid += 1
+
+        threading.Thread(target=acceptor, daemon=True).start()
+
+        def route(rid: int) -> None:
+            ent = inflight[rid]
+            live = self.live_handles()
+            if not live:
+                raise RuntimeError("no live serve workers")
+            loads = {h.wid: 0 for h in live}
+            for r2, e2 in inflight.items():
+                if r2 != rid and e2["wid"] in loads:
+                    loads[e2["wid"]] += 1
+            h = min(live, key=lambda h: loads[h.wid])
+            ent["wid"] = h.wid
+            h.send({"type": "request", "req": rid,
+                    "prompt": ent["prompt"],
+                    "max_new_tokens": ent["max_new_tokens"]})
+
+        rerouted: set = set()            # wids already drained after death
+        try:
+            while not self._stop_serve.is_set():
+                moved = False
+                try:                     # 1) new submits from clients
+                    while True:
+                        cl, msg = submits.get_nowait()
+                        rid = next_rid
+                        next_rid += 1
+                        inflight[rid] = {
+                            "client": cl, "tag": msg["tag"],
+                            "prompt": msg["prompt"],
+                            "max_new_tokens": msg["max_new_tokens"],
+                            "wid": None, "t_route": time.monotonic()}
+                        route(rid)
+                        moved = True
+                except queue.Empty:
+                    pass
+                for h in self.handles:   # 2) results back to clients
+                    while True:
+                        try:
+                            msg = h.inbox.get_nowait()
+                        except queue.Empty:
+                            break
+                        if msg is None or msg.get("type") != "result":
+                            continue
+                        ent = inflight.pop(msg["req"], None)
+                        if ent is None:
+                            continue     # duplicate after a reroute
+                        moved = True
+                        rec = dict(msg.get("telemetry") or {})
+                        rec["worker"] = h.wid
+                        rec["tag"] = ent["tag"]
+                        rec["e2e_s"] = time.monotonic() - ent["t_route"]
+                        self.request_log.append(rec)
+                        ent["client"].send({"type": "result",
+                                            "tag": ent["tag"],
+                                            "tokens": msg["tokens"],
+                                            "telemetry": rec})
+                for h in self.handles:   # 3) failover: reroute the dead
+                    if h.alive or h.wid in rerouted:
+                        continue
+                    rerouted.add(h.wid)
+                    for rid, ent in list(inflight.items()):
+                        if ent["wid"] == h.wid:
+                            route(rid)
+                            moved = True
+                if not moved:
+                    time.sleep(poll)
+        finally:
+            self._stop_serve.set()
+            self._shutdown_workers()
+            for cl in clients:
+                cl.close()
+        return self.request_log
+
+    def stop_serving(self) -> None:
+        ev = getattr(self, "_stop_serve", None)
+        if ev is not None:
+            ev.set()
 
     # -- teardown ------------------------------------------------------
     def _shutdown_workers(self) -> None:

@@ -126,6 +126,9 @@ class WorkerAgent:
         self.cfg_msg = cfg
         self._start_heartbeat(cfg.get("heartbeat_interval", 0.5))
         try:
+            if cfg.get("serve"):
+                self._serve_loop(cfg)
+                return
             self._build_trainer(hdp=cfg["hdp"], ranks=cfg["ranks"],
                                 ckpt_owner=cfg["ckpt_owner"],
                                 resume_step=cfg.get("resume_step", 0))
@@ -276,6 +279,79 @@ class WorkerAgent:
                         "loss": rec["loss"],
                         "grad_norm": rec["grad_norm"],
                         "keys": keys, "telemetry": self._telemetry})
+
+    # -- serve mode ----------------------------------------------------
+    def _serve_loop(self, cfg: dict) -> None:
+        """Serve under controller command: build one ServeEngine over the
+        local mesh, then pump requests in and results out.  A reader
+        thread feeds an inbox (the channel's single-reader contract) so
+        the engine loop never blocks on the wire while slots are live;
+        the heartbeat's progress counter advances per engine step, so
+        the controller's hang detection covers serving too."""
+        import queue as _q
+
+        import jax
+
+        from repro.models.transformer import init_params
+        from repro.serve import ServeConfig, ServeEngine
+
+        self._progress += 1
+        spec = cfg["spec"].replace(hdp=cfg["hdp"], rank_speed=None)
+        tp = int(cfg.get("tp", 1))
+        need = spec.hdp * tp
+        assert need <= len(jax.devices()), (need, len(jax.devices()))
+        mesh = compat.make_mesh((spec.hdp, tp), ("data", "model"),
+                                axis_types=compat.auto_axis_types(2))
+        rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
+                     **cfg.get("runtime_kw", {}))
+        compat.set_mesh(mesh)
+        params = init_params(jax.random.PRNGKey(int(cfg.get("seed", 0))),
+                             cfg["model"], rt)
+        engine = ServeEngine(params, cfg["model"], rt,
+                             ServeConfig(**cfg["serve"]))
+        self._progress += 1
+        self.chan.send({"type": "ready", "step": 0})
+
+        inbox: "_q.Queue" = _q.Queue()
+
+        def reader():
+            try:
+                while True:
+                    inbox.put(self.chan.recv())
+            except (EOFError, OSError):
+                inbox.put(None)
+
+        threading.Thread(target=reader, daemon=True).start()
+        rid_to_req: Dict[int, int] = {}
+        while True:
+            # ingest pending traffic; block only when the slab is idle
+            while True:
+                try:
+                    if engine.pool.n_open == 0:
+                        msg = inbox.get(timeout=0.25)
+                    else:
+                        msg = inbox.get_nowait()
+                except _q.Empty:
+                    if engine.pool.n_open == 0:
+                        continue
+                    break
+                if msg is None:
+                    return                    # controller gone
+                mtype = msg.get("type")
+                if mtype == "shutdown":
+                    self.chan.send({"type": "bye"})
+                    return
+                if mtype == "request":
+                    rid = engine.submit(np.asarray(msg["prompt"], np.int32),
+                                        int(msg["max_new_tokens"]))
+                    rid_to_req[rid] = msg["req"]
+            finished = engine.step()
+            self._progress += 1
+            for req in finished:
+                self.chan.send({"type": "result",
+                                "req": rid_to_req.pop(req.rid),
+                                "tokens": [int(t) for t in req.generated],
+                                "telemetry": req.telemetry()})
 
     def _final_checkpoint(self) -> None:
         tr = self.trainer

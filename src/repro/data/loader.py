@@ -48,9 +48,13 @@ class SyntheticDataset:
 
     def tokens(self, step: int, seq_id: int, start: int, end: int) -> np.ndarray:
         """Deterministic pseudo-tokens — reproducible across restarts and
-        re-shardings (a hash, not storage)."""
+        re-shardings (a hash over (step, seq_id, index), not storage).
+        ``step`` is mixed into the hash so step t+1 carries fresh content
+        for a recycled ``seq_id`` (it used to be ignored, replaying the
+        same tokens every step)."""
         idx = np.arange(start, end, dtype=np.uint64)
         h = (idx + np.uint64(seq_id) * np.uint64(1_000_000_007)
+             + np.uint64(step) * np.uint64(97_370_169_095_641)
              + np.uint64(self.seed) * np.uint64(11_400_714_819_323_198_485))
         h = (h * np.uint64(2_654_435_761)) ^ (h >> np.uint64(13))
         return (h % np.uint64(self.vocab)).astype(np.int32)
@@ -203,26 +207,51 @@ class WaveMaterializer:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = object()
         err: List[BaseException] = []
+        cancel = threading.Event()
+
+        def _put(item) -> bool:
+            # bounded put that gives up when the consumer walked away —
+            # a plain q.put() would block forever once the generator is
+            # closed mid-step (error in the trainer, elastic reconfig)
+            while not cancel.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def producer():
             try:
                 for item in produce():
-                    q.put(item)
+                    if not _put(item):
+                        return
             except BaseException as e:
                 # a bad plan must fail the *step*, not vanish with the
                 # thread: capture and re-raise on the consumer side (the
                 # bare `finally: q.put(stop)` used to swallow it)
                 err.append(e)
             finally:
-                q.put(stop)
+                _put(stop)
 
-        th = threading.Thread(target=producer, daemon=True)
+        th = threading.Thread(target=producer, daemon=True,
+                              name="wave-materializer-prefetch")
         th.start()
-        while True:
-            item = q.get()
-            if item is stop:
-                break
-            yield item
-        th.join()
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                yield item
+        finally:
+            # reached on normal exhaustion AND on GeneratorExit/throw();
+            # release the producer if it is parked on a full queue
+            cancel.set()
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            th.join()
         if err:
             raise err[0]

@@ -78,6 +78,12 @@ class LocalCluster:
         self.controller.wait_for_workers()
         return self.controller.run(on_step=on_step)
 
+    def run_serve(self, stop=None) -> List[Dict]:
+        """Serve mode: route client requests until ``stop`` fires;
+        returns the per-request telemetry log (see Controller.run_serve)."""
+        self.controller.wait_for_workers()
+        return self.controller.run_serve(stop=stop)
+
     def kill_worker(self, idx: int, sig: int = signal.SIGKILL) -> None:
         """Fault injection: hard-kill worker ``idx`` (spawn order)."""
         self.procs[idx].send_signal(sig)

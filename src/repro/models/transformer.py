@@ -144,11 +144,17 @@ def init_params(key, cfg: ModelConfig, rt: Runtime) -> dict:
 # ---------------------------------------------------------------------------
 
 def _attention_block(bp, cfg: ModelConfig, rt: Runtime, x, seg, pos,
-                     window: int):
+                     window: int, collect: Optional[list] = None):
+    """``collect`` (serving): a list the block appends its per-token cache
+    rows to — post-rotation (k, v), or the MLA latent kv — in exactly the
+    layout `train/serve_step.py`'s decode cache stores per position, so a
+    packed prefill can hand a populated cache to the decode path."""
     t = x.shape[0]
     pos_s = L.scalar_positions(cfg, pos)
     if cfg.mla is not None:
         q_eff, kv_eff = MLA.mla_qkv(bp, cfg, x, pos_s)
+        if collect is not None:
+            collect.append({"kv_lat": kv_eff})
         h_pad = rt.layout(cfg).h_pad
         if q_eff.shape[1] < h_pad:                       # pad heads to tp multiple
             q_eff = jnp.pad(q_eff, ((0, 0), (0, h_pad - q_eff.shape[1]), (0, 0)))
@@ -174,6 +180,8 @@ def _attention_block(bp, cfg: ModelConfig, rt: Runtime, x, seg, pos,
         q = L.qk_head_norm(bp["q_norm"], q, cfg.norm_eps)
         k = L.qk_head_norm(bp["k_norm"], k, cfg.norm_eps)
     q, k = L.positional_rotate(cfg, q, k, pos, pos)
+    if collect is not None:
+        collect.append({"k": k, "v": v})
     out = R.ring_attention(
         q, k, v, seg, seg, pos_s, pos_s,
         mesh=rt.mesh, hdp_axes=rt.hdp_axes, model_axis=rt.model_axis,
@@ -283,12 +291,13 @@ def _moe_block(bp, cfg: ModelConfig, rt: Runtime, x):
 
 
 def block_forward(bp, cfg: ModelConfig, rt: Runtime, x, seg, pos,
-                  layer_idx: int):
+                  layer_idx: int, collect: Optional[list] = None):
     code = cfg.layer_code(layer_idx)
     window = cfg.window if code == "l" else 0
     h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if code in ("g", "l"):
-        h = _attention_block(bp["attn"], cfg, rt, h, seg, pos, window)
+        h = _attention_block(bp["attn"], cfg, rt, h, seg, pos, window,
+                             collect=collect)
     elif code == "m":
         h = _ssm_block(bp["mamba"], cfg, rt, h, seg, code, "mamba")
     else:
@@ -334,9 +343,12 @@ def _split_stacked(blocks, k: int):
     return head, tail
 
 
-def embed_frontend(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
+def embed_frontend(params, cfg: ModelConfig, rt: Runtime, batch,
+                   collect: Optional[list] = None) -> jnp.ndarray:
     """Token/embedding frontend + the un-scanned head blocks (DeepSeek
-    dense head).  First-stage work under pipeline parallelism."""
+    dense head).  First-stage work under pipeline parallelism.
+    ``collect``: per-head-block KV capture for serving (see
+    `_attention_block`)."""
     seg, pos = batch["seg"], batch["pos"]
     if cfg.frontend == "none":
         x = embed_tokens(params, cfg, batch["tokens"])
@@ -350,7 +362,7 @@ def embed_frontend(params, cfg: ModelConfig, rt: Runtime, batch) -> jnp.ndarray:
     x = jax.lax.with_sharding_constraint(x, P(rt.hdp_axes, None))
 
     for i, bp in enumerate(params["head_blocks"]):
-        x = block_forward(bp, cfg, rt, x, seg, pos, i)
+        x = block_forward(bp, cfg, rt, x, seg, pos, i, collect=collect)
     return x
 
 

@@ -20,9 +20,15 @@ straggler was invisible.  This module replaces it with measurement:
     cannot be localized from wall times alone — the signal comes from
     waves where it idles (and grows as feedback gives it less work).
 
-  A global scale EMA (measured / modeled over all observations) removes
-  the cost model's absolute error; what remains per rank is its
+  A global scale — the rolling median of measured/modeled ratios —
+  removes the cost model's absolute error; what remains per rank is its
   *relative* speed.  Ranks never observed stay at their prior (1.0).
+  Residuals are always attributed against the scale as it stood BEFORE
+  the current sample landed (attributing a wall sample against a scale
+  it just moved biases every speed estimate toward 1), and nothing is
+  attributed or outlier-gated until a short warmup has filled the
+  median (a spike on the very first observation used to seed the scale
+  and then gate every honest sample against the poisoned value).
 
 * **CostCoeffs refit.**  T(s) is a *per-sequence* curve — a packed bin
   costs Σ T(len_i), a g-sharded sequence T(len)/g — so only observations
@@ -71,6 +77,10 @@ def fit_length_of(waves) -> Optional[int]:
 
 _TIE_FRAC = 0.98          # ranks within 2% of the wave max share the blame
 _OUTLIER = 8.0            # drop samples > 8x the running scale (GC, page-in)
+_WARMUP = 3               # ratio samples before the outlier gate and the
+                          # speed attribution engage (a median over fewer
+                          # is whatever spike happened to come first)
+_SCALE_WINDOW = 64        # rolling window the scale median is taken over
 _GRAD_STEP_FACTOR = 3.0   # measured walls are fwd+bwd grad steps; T(s) is
                           # the forward-only curve (bwd ~ 2x fwd FLOPs), so
                           # fit samples are de-scaled by this before the fit
@@ -92,9 +102,27 @@ class OnlineCalibrator:
         self.min_fit_points = min_fit_points
         self.fit_time_scale = max(fit_time_scale, 1e-9)
         self._speed = np.ones(hdp)
-        self._scale: Optional[float] = None        # EMA of measured/modeled
+        # measured/modeled ratios; the scale is their rolling median, so a
+        # GC/page-in spike on the FIRST observation cannot seed the scale
+        # and then gate every honest sample against the poisoned value
+        self._ratios: Deque[float] = deque(maxlen=_SCALE_WINDOW)
         self._samples: Deque[Tuple[int, float]] = deque(maxlen=max_samples)
         self.n_observed = 0
+
+    @property
+    def _scale(self) -> Optional[float]:
+        """Fleet-wide measured/modeled scale: rolling median, None until
+        any observation landed."""
+        if not self._ratios:
+            return None
+        return float(np.median(self._ratios))
+
+    def _scale_ref(self) -> Optional[float]:
+        """The scale residuals are attributed against — None during warmup
+        (too few samples for the median to mean anything)."""
+        if len(self._ratios) < _WARMUP:
+            return None
+        return float(np.median(self._ratios))
 
     # ------------------------------------------------------------------
     def observe(self, costs, seconds: Optional[float] = None,
@@ -116,24 +144,29 @@ class OnlineCalibrator:
         if seconds is None or seconds <= 0.0:
             return
         ratio = seconds / modeled                   # wall per modeled second
-        if self._scale is not None and ratio > _OUTLIER * self._scale:
+        # the reference scale is taken BEFORE this sample lands: gating a
+        # sample against a scale it already moved under-rejects spikes,
+        # and attributing against a scale it already moved biases every
+        # wall-channel speed sample toward 1 (self-comparison)
+        ref = self._scale_ref()
+        if ref is not None and ratio > _OUTLIER * ref:
             return                                  # compile / GC spike
-        self._scale = ratio if self._scale is None \
-            else self.ema * self._scale + (1 - self.ema) * ratio
-        if rank_seconds is not None:
-            # direct per-rank samples: measured_r = scale * cost_r / speed_r
-            active = np.flatnonzero((costs > 0) & (rank_seconds > 0))
-            for r in active:
-                rel = self._scale * costs[r] / rank_seconds[r]
-                self._speed[r] = (self.ema * self._speed[r]
-                                  + (1 - self.ema) * rel)
-        else:
-            # wall time blames the modeled bottleneck rank(s): how much
-            # faster/slower the wave ran than the fleet-wide scale predicts
-            rel = self._scale / ratio
-            for r in np.flatnonzero(costs >= _TIE_FRAC * modeled):
-                self._speed[r] = (self.ema * self._speed[r]
-                                  + (1 - self.ema) * rel)
+        self._ratios.append(float(ratio))
+        if ref is not None:
+            if rank_seconds is not None:
+                # per-rank samples: measured_r = scale * cost_r / speed_r
+                active = np.flatnonzero((costs > 0) & (rank_seconds > 0))
+                for r in active:
+                    rel = ref * costs[r] / rank_seconds[r]
+                    self._speed[r] = (self.ema * self._speed[r]
+                                      + (1 - self.ema) * rel)
+            else:
+                # wall time blames the modeled bottleneck rank(s): how much
+                # faster/slower the wave ran than the fleet scale predicts
+                rel = ref / ratio
+                for r in np.flatnonzero(costs >= _TIE_FRAC * modeled):
+                    self._speed[r] = (self.ema * self._speed[r]
+                                      + (1 - self.ema) * rel)
         if fit_length is not None and fit_length > 0:
             # de-scale the grad-step wall to the forward-only curve T(s)
             # fits (profile_model feeds the same fitter forward timings)
@@ -185,6 +218,7 @@ class OnlineCalibrator:
         from scratch."""
         return {"speed": [float(s) for s in self._speed],
                 "scale": None if self._scale is None else float(self._scale),
+                "ratios": [float(r) for r in self._ratios],
                 "samples": [[int(s), float(t)] for s, t in self._samples],
                 "n_observed": int(self.n_observed)}
 
@@ -211,7 +245,13 @@ class OnlineCalibrator:
             if speed.size != self.hdp:
                 return
             self._speed = speed.copy()
-        self._scale = state.get("scale")
+        ratios = state.get("ratios")
+        if ratios is None:
+            # pre-rolling-median snapshot: its EMA scale seeds one ratio
+            scale = state.get("scale")
+            ratios = [] if scale is None else [scale]
+        self._ratios = deque((float(r) for r in ratios),
+                             maxlen=_SCALE_WINDOW)
         self._samples = deque(((int(s), float(t))
                                for s, t in state.get("samples", [])),
                               maxlen=self._samples.maxlen)

@@ -284,6 +284,39 @@ class SchedulerService:
                 return t
         return None
 
+    # -- serve-mode planning -------------------------------------------
+    def plan_pool(self, lengths) -> StepPlan:
+        """Serve-mode planning: one plan for the CURRENT request pool,
+        keyed on the live lengths instead of a dataset step.  The serving
+        engine calls this every admission round as requests arrive and
+        finish, so the composition re-adapts to whatever mix is waiting.
+
+        Shares the template registry (compile-key reuse across rounds —
+        an engine that has jitted (4,4) prefill keeps getting (4,4) for
+        near-identical pools) and the load accumulator + rank_speed
+        (slow ranks keep getting less prefill work), all under the same
+        ``_plan_lock`` discipline as the step-keyed paths.  The attached
+        dataset is never touched, so a service constructed with
+        ``dataset=None`` supports serve mode alone."""
+        lengths = [int(x) for x in lengths]
+        if not lengths:
+            raise ValueError("plan_pool needs a non-empty request pool")
+        with self._plan_lock:
+            with self._cv:
+                if self._err is not None:
+                    raise self._err
+                if self._stopped:
+                    raise RuntimeError("SchedulerService is stopped")
+                pending, self._warm_pending = self._warm_pending, []
+                spec = self.spec.replace(rank_speed=self.rank_speed)
+            for comp, c_mult in pending:
+                self.templates.setdefault(template_class(comp, c_mult),
+                                          comp)
+            plans = plan_window([lengths], spec, templates=self.templates,
+                                load=self.load)
+            plans[0].stats["lengths"] = len(lengths)
+            return plans[0]
+
     # -- consumer API --------------------------------------------------
     def plan_step(self, step: int) -> StepPlan:
         """The plan for ``step`` (blocking until the planner thread has it,

@@ -1,0 +1,24 @@
+"""HDP serving engine: continuous batching on the dynamic mesh.
+
+The training insight — sequence-length heterogeneity breaks static
+meshes — is sharper at inference: an open request pool mixes 100k-token
+prefills with single-token decodes every step.  The engine splits the
+two regimes:
+
+* **Prefill** runs through the packed-buffer forward: the pool's waiting
+  prompts are planned by `core.planner.plan()` into waves of dynamic
+  compositions (long prompts CP-sharded through ring-flash, short ones
+  packed g=1), exactly like a training step without the backward.
+* **Decode** runs a fixed-width slab of per-request cache slots through
+  `train/serve_step.make_decode_step`, one token per wave, each slot at
+  its own depth — new requests are admitted into the RUNNING batch the
+  moment a slot frees (continuous batching).
+
+`pool`   — request lifecycle + thread-safe pool.
+`engine` — ServeEngine: admission, prefill→decode KV handoff, decode slab.
+`router` — the request wire format over `ctrl.rpc` framing.
+"""
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.pool import Request, RequestPool
+
+__all__ = ["Request", "RequestPool", "ServeConfig", "ServeEngine"]

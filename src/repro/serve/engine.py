@@ -1,0 +1,275 @@
+"""ServeEngine: continuous batching over the HDP planner.
+
+One engine owns one model replica (the whole mesh) and two compiled
+regimes:
+
+* **Prefill** — waiting prompts are planned by
+  `SchedulerService.plan_pool` into waves of dynamic compositions (the
+  same `core.planner.plan` the trainer uses: long prompts CP-sharded,
+  short ones packed), materialized into flat packed buffers and run
+  through `make_prefill_kv_step`, which returns the per-layer KV rows.
+  The engine gathers each request's rows via the wave's piece layout and
+  scatters them into that request's decode-slab slot — the
+  prefill→decode handoff.  One jit per composition, reused across
+  admission rounds (the template registry keeps the planner emitting
+  compositions it has already compiled).
+* **Decode** — a fixed-width slab of ``max_slots`` cache slots compiled
+  ONCE (`make_decode_step` with per-slot positions); every wave decodes
+  all live slots one token at their own depths.  A slot frees the moment
+  its request finishes and the next admission round refills it without
+  touching the running batch — continuous batching.  ``admission:
+  "static"`` degrades to the classic baseline (admit only into an empty
+  slab) for benchmarking.
+
+Attention-only layer patterns with a token frontend (SSM decode state
+cannot be captured from the packed forward — see
+`make_prefill_kv_step`).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.planner import PlanSpec
+from repro.data.loader import WaveMaterializer
+from repro.models.transformer import logits_head
+from repro.parallel.sharding import Runtime
+from repro.serve.pool import Request, RequestPool
+from repro.train.serve_step import (_layer_cache_len, init_decode_cache,
+                                    make_decode_step, make_prefill_kv_step)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 8            # decode-slab width (live batch ceiling)
+    max_context: int = 256        # per-slot cache length (prompt + gen)
+    prefill_capacity: int = 256   # per-rank capacity tokens for planning
+    admission: str = "continuous"  # or "static" (drain-then-refill)
+    collect_logits: bool = False  # keep per-token logits rows (tests)
+
+
+class _PromptProvider:
+    """Duck-typed SyntheticDataset for the materializer: token reads
+    slice the admitted prompts (zero-padded past the end, which only the
+    unused labels ever read)."""
+
+    def __init__(self, prompts: List[np.ndarray]):
+        self.prompts = prompts
+
+    def tokens(self, step: int, seq_id: int, start: int,
+               end: int) -> np.ndarray:
+        p = self.prompts[seq_id]
+        out = np.zeros(end - start, np.int32)
+        n = max(0, min(end, len(p)) - start)
+        if n > 0:
+            out[:n] = p[start:start + n]
+        return out
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, rt: Runtime,
+                 scfg: ServeConfig, *, service=None, clock=time.monotonic):
+        if not set(cfg.layer_pattern) <= {"g", "l"}:
+            raise NotImplementedError(
+                f"serving needs an attention-only pattern, got "
+                f"{cfg.layer_pattern!r}")
+        if cfg.frontend != "none":
+            raise NotImplementedError("serving needs a token frontend")
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.scfg = scfg
+        self.clock = clock
+        self.pool = RequestPool(clock=clock)
+        if service is None:
+            from repro.sched.service import SchedulerService
+            spec = PlanSpec.for_config(
+                cfg, capacity=scfg.prefill_capacity, hdp=rt.hdp_size,
+                use_offload=False)
+            service = SchedulerService(None, spec)
+        self.service = service
+
+        b, s = scfg.max_slots, scfg.max_context
+        self.cache = init_decode_cache(cfg, rt, b, s)
+        self._decode = jax.jit(make_decode_step(cfg, rt, b, s))
+        self._prefill_jits: Dict[Tuple[int, ...], object] = {}
+        self._head_n = len(self.cache["head_layers"])
+
+        # slab bookkeeping (host side)
+        self._req: List[Optional[Request]] = [None] * b
+        self._pos = np.zeros(b, np.int32)   # next position each slot feeds
+        self._tok = np.zeros(b, np.int32)   # next token each slot feeds
+        self.records: List[dict] = []       # per-request telemetry
+        self.stats = {"prefill_waves": 0, "decode_waves": 0,
+                      "compiled_compositions": 0}
+
+    # -- submission ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size >= self.scfg.max_context:
+            raise ValueError(
+                f"prompt ({prompt.size}) must fit the per-slot cache "
+                f"(max_context={self.scfg.max_context}) with room to "
+                f"generate")
+        return self.pool.submit(prompt, max_new_tokens,
+                                collect_logits=self.scfg.collect_logits)
+
+    # -- engine loop ---------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine iteration: admit into free slots, then decode one
+        token on every live slot.  Returns the requests finished now."""
+        self._admit()
+        return self._decode_wave()
+
+    def drain(self, max_steps: int = 1_000_000) -> List[Request]:
+        out: List[Request] = []
+        for _ in range(max_steps):
+            if self.pool.n_open == 0:
+                return out
+            out.extend(self.step())
+        raise RuntimeError(f"pool not drained after {max_steps} steps")
+
+    # -- admission (prefill) -------------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self._req) if r is None]
+        if not free:
+            return
+        if self.scfg.admission == "static" and len(free) != len(self._req):
+            return                       # static: drain, then refill
+        reqs = self.pool.take_waiting(len(free))
+        if not reqs:
+            return
+        plan = self.service.plan_pool([r.plen for r in reqs])
+        slot_of = {i: free[i] for i in range(len(reqs))}
+        provider = _PromptProvider([r.prompt for r in reqs])
+        mat = WaveMaterializer(provider, self.cfg,
+                               self.scfg.prefill_capacity)
+        for wave in plan.waves:
+            self._prefill_wave(wave, mat, reqs, slot_of)
+        for r in reqs:                   # max_new_tokens == 1 finishes at
+            if len(r.generated) >= r.max_new_tokens:     # prefill already
+                self._retire(r)
+
+    def _prefill_fn(self, comp: Tuple[int, ...]):
+        fn = self._prefill_jits.get(comp)
+        if fn is None:
+            rt2 = self.rt.with_composition(comp)
+            fn = jax.jit(make_prefill_kv_step(self.cfg, rt2))
+            self._prefill_jits[comp] = fn
+            self.stats["compiled_compositions"] += 1
+        return fn
+
+    def _prefill_wave(self, wave, mat: WaveMaterializer,
+                      reqs: List[Request], slot_of: Dict[int, int]) -> None:
+        t0 = self.clock()
+        lw = mat.materialize(0, wave)
+        fn = self._prefill_fn(tuple(wave.composition))
+        hidden, head_kv, block_kv = fn(self.params, lw.batch)
+        hidden = np.asarray(hidden)
+
+        # flat-buffer row of every (seq, abs position) — the same cursor
+        # walk `WaveMaterializer.materialize` packs with, so CP zigzag
+        # splits land on the right rows automatically
+        c = self.scfg.prefill_capacity * wave.c_mult
+        flat: Dict[int, np.ndarray] = {}
+        for r, pieces in enumerate(wave.slots):
+            cursor = r * c
+            for p in pieces:
+                fl = flat.setdefault(p.seq_id,
+                                     np.full(reqs[p.seq_id].plen, -1,
+                                             np.int64))
+                fl[p.start:p.end] = np.arange(cursor, cursor + p.length)
+                cursor += p.length
+
+        covered = [reqs[sid] for sid in sorted(flat)]
+        total = sum(r.plen for r in covered)
+        for sid, fl in sorted(flat.items()):
+            req = reqs[sid]
+            slot = slot_of[sid]
+            req.slot = slot
+            self._scatter_kv(slot, req.plen, fl, head_kv, block_kv)
+            # first generated token comes straight out of the prefill
+            h_last = jnp.asarray(hidden[fl[req.plen - 1]])[None]
+            row = np.asarray(logits_head(self.params, self.cfg, h_last))[0]
+            tok = int(row.argmax())
+            req.generated.append(tok)
+            req.t_first = self.clock()
+            if req.logits is not None:
+                req.logits.append(row.copy())
+            self._req[slot] = req
+            self._pos[slot] = req.plen
+            self._tok[slot] = tok
+        dt = self.clock() - t0
+        for req in covered:              # attribute by token share
+            req.prefill_s += dt * req.plen / max(total, 1)
+        self.stats["prefill_waves"] += 1
+
+    def _scatter_kv(self, slot: int, plen: int, fl: np.ndarray,
+                    head_kv, block_kv) -> None:
+        """Scatter one request's collected KV rows into its slab slot —
+        ring-buffer layers keep only the last window of the prompt, at
+        `pos % window` exactly like the decode-side writes."""
+        def write(cache_layer, kv, layer_idx, stacked):
+            s_l = _layer_cache_len(self.cfg, layer_idx,
+                                   self.scfg.max_context)
+            keep = np.arange(max(0, plen - s_l), plen)
+            slots = jnp.asarray(keep % s_l)
+            rows = jnp.asarray(fl[keep])
+            for name, arr in kv.items():
+                buf = cache_layer[name]
+                data = (arr[:, rows] if stacked else arr[rows])
+                data = data.astype(buf.dtype)
+                cache_layer[name] = (
+                    buf.at[:, slot, slots].set(data) if stacked
+                    else buf.at[slot, slots].set(data))
+
+        for i, kv in enumerate(head_kv):
+            write(self.cache["head_layers"][i], kv, i, stacked=False)
+        for j, kv in enumerate(block_kv):
+            write(self.cache["blocks"][j], kv, self._head_n + j,
+                  stacked=True)
+
+    # -- decode --------------------------------------------------------
+    def _decode_wave(self) -> List[Request]:
+        active = [i for i, r in enumerate(self._req) if r is not None]
+        if not active:
+            return []
+        t0 = self.clock()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._tok),
+            jnp.asarray(self._pos))
+        lognp = np.asarray(logits)
+        dt = self.clock() - t0
+        self.stats["decode_waves"] += 1
+        finished: List[Request] = []
+        for i in active:
+            req = self._req[i]
+            tok = int(lognp[i].argmax())
+            req.generated.append(tok)
+            req.decode_s += dt / len(active)
+            if req.logits is not None:
+                req.logits.append(lognp[i].copy())
+            self._pos[i] += 1
+            self._tok[i] = tok
+            if (len(req.generated) >= req.max_new_tokens
+                    or int(self._pos[i]) >= self.scfg.max_context):
+                finished.append(req)
+                self._retire(req)
+        return finished
+
+    def _retire(self, req: Request) -> None:
+        if req.slot is not None:
+            self._req[req.slot] = None
+        self.pool.finish(req)
+        self.records.append(req.telemetry())
+
+    # -- introspection -------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return sum(1 for r in self._req if r is not None)

@@ -1,0 +1,82 @@
+"""Client side of the request router.
+
+The controller's listener speaks one framed-pickle protocol
+(`ctrl/rpc.py`) to two kinds of peers, distinguished by their first
+message: workers say ``{"type": "hello"}``, clients say
+``{"type": "client_hello"}``.  Client traffic after the hello:
+
+    client                              controller
+    ------                              ----------
+    submit {tag, prompt,
+            max_new_tokens}  -------->  routes to the least-loaded live
+                                        serve worker as a "request"
+               <------- result -------  {tag, tokens, telemetry}
+    ... any number of in-flight submits, results arrive unordered ...
+
+``tag`` is the client's correlation id (the controller assigns its own
+global request ids internally); ``telemetry`` is the engine's
+per-request record (admit/first-token/done timestamps and attributed
+prefill/decode seconds).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.ctrl.rpc import connect
+
+
+class ServeClient:
+    def __init__(self, address: str, timeout: float = 60.0):
+        self.chan = connect(address, timeout=timeout)
+        self.chan.send({"type": "client_hello"})
+        self._tags = itertools.count()
+        self._results: Dict[int, dict] = {}
+        self._cv = threading.Condition()
+        self._err: Optional[BaseException] = None
+        self._reader = threading.Thread(target=self._read_loop, daemon=True)
+        self._reader.start()
+
+    def _read_loop(self) -> None:
+        try:
+            while True:
+                msg = self.chan.recv()
+                if msg.get("type") != "result":
+                    continue
+                with self._cv:
+                    self._results[msg["tag"]] = msg
+                    self._cv.notify_all()
+        except (EOFError, OSError) as e:
+            with self._cv:
+                self._err = e
+                self._cv.notify_all()
+
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Fire a request; returns the tag to claim the result with."""
+        tag = next(self._tags)
+        self.chan.send({"type": "submit", "tag": tag,
+                        "prompt": [int(t) for t in np.asarray(prompt)
+                                   .reshape(-1)],
+                        "max_new_tokens": int(max_new_tokens)})
+        return tag
+
+    def result(self, tag: int, timeout: Optional[float] = None) -> dict:
+        """Block for one result: {"tokens": [...], "telemetry": {...}}."""
+        with self._cv:
+            while tag not in self._results:
+                if self._err is not None:
+                    raise self._err
+                if not self._cv.wait(timeout=timeout):
+                    raise TimeoutError(f"no result for tag {tag}")
+            return self._results.pop(tag)
+
+    def generate(self, prompt, max_new_tokens: int,
+                 timeout: Optional[float] = None) -> List[int]:
+        return self.result(self.submit(prompt, max_new_tokens),
+                           timeout=timeout)["tokens"]
+
+    def close(self) -> None:
+        self.chan.close()

@@ -35,8 +35,14 @@ AxisNames = Tuple[str, ...]
 
 
 def decode_axes(cfg: ModelConfig, rt: Runtime, batch: int):
-    """(batch_axes, seq_axes) for the decode cache."""
-    if batch >= rt.hdp_size:
+    """(batch_axes, seq_axes) for the decode cache.
+
+    Batch goes to the HDP axes only when it actually tiles them — a live
+    serving pool is any size (7 requests on 8 ranks), and shard_map
+    rejects non-divisible batches with an opaque sharding error, so an
+    uneven batch falls back to sharding the cache sequence dim over
+    every axis instead."""
+    if batch >= rt.hdp_size and batch % rt.hdp_size == 0:
         return rt.hdp_axes, (rt.model_axis,)
     return (), rt.hdp_axes + (rt.model_axis,)
 
@@ -144,20 +150,21 @@ def _decode_attention(bp, cache, cfg: ModelConfig, rt: Runtime, x, pos,
     b = x.shape[0]
     code = cfg.layer_code(layer_idx)
     s_l = _layer_cache_len(cfg, layer_idx, seq_len)
-    slot = pos % s_l
-    filled = jnp.minimum(pos + 1, s_l)
-    pos_b = jnp.full((b,), pos, jnp.int32)
+    # pos is per-element [B] (a continuously-batched pool decodes every
+    # slot at its own depth); cache writes are row-wise scatters
+    pos_b = pos.astype(jnp.int32)
+    slot = pos_b % s_l                                           # [B]
+    filled = jnp.minimum(pos_b + 1, s_l).astype(jnp.int32)       # [B]
+    rows = jnp.arange(b)
 
     if cfg.mla is not None:
         m = cfg.mla
         q_eff, kv_eff = MLA.mla_qkv(bp, cfg, x, pos_b)          # [B,H,576],[B,1,576]
-        kv_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["kv_lat"], kv_eff[:, None].astype(cache["kv_lat"].dtype),
-            slot, axis=1)
+        kv_cache = cache["kv_lat"].at[rows, slot].set(
+            kv_eff.astype(cache["kv_lat"].dtype))
         out = R.decode_attention_sharded(
             q_eff[:, None, :, :], kv_cache,
-            kv_cache[..., :m.kv_lora_rank],
-            jnp.full((b,), filled, jnp.int32),
+            kv_cache[..., :m.kv_lora_rank], filled,
             mesh=rt.mesh, batch_axes=batch_axes, seq_axes=seq_axes,
             scale=MLA.mla_scale(cfg), softcap=cfg.attn_softcap)
         out = out[:, 0]                                          # [B,H,512]
@@ -176,13 +183,11 @@ def _decode_attention(bp, cache, cfg: ModelConfig, rt: Runtime, x, pos,
         cfg, q, k_new,
         pos_b if cfg.pos_embed != "mrope" else jnp.stack([pos_b] * 3, -1),
         pos_b if cfg.pos_embed != "mrope" else jnp.stack([pos_b] * 3, -1))
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new[:, None].astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new[:, None].astype(cache["v"].dtype), slot, axis=1)
+    k_cache = cache["k"].at[rows, slot].set(k_new.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[rows, slot].set(v_new.astype(cache["v"].dtype))
     qg = q.reshape(b, g, layout.hpg_pad, dk)
     out = R.decode_attention_sharded(
-        qg, k_cache, v_cache, jnp.full((b,), filled, jnp.int32),
+        qg, k_cache, v_cache, filled,
         mesh=rt.mesh, batch_axes=batch_axes, seq_axes=seq_axes,
         scale=dk ** -0.5, softcap=cfg.attn_softcap)
     out = out.reshape(b, layout.h_pad, dk)
@@ -237,7 +242,9 @@ def make_decode_step(cfg: ModelConfig, rt: Runtime, batch: int, seq_len: int):
     period = len(cfg.layer_pattern)
 
     def decode_step(params, cache, tokens_or_embeds, pos):
-        """tokens [B] int32 (or embeds [B, d]); pos: scalar int32 position.
+        """tokens [B] int32 (or embeds [B, d]); pos: scalar int32 position
+        OR per-slot [B] positions — a continuously-batched pool decodes
+        every live request at its own depth.
         Returns (logits [B, V], new cache)."""
         if cfg.frontend == "none":
             x = embed_tokens(params, cfg, tokens_or_embeds)
@@ -245,15 +252,16 @@ def make_decode_step(cfg: ModelConfig, rt: Runtime, batch: int, seq_len: int):
             x = tokens_or_embeds
             if cfg.embed_scale:
                 x = x * math.sqrt(cfg.d_model)
+        b = x.shape[0]
+        pos = jnp.asarray(pos, jnp.int32)
+        pos_b = jnp.full((b,), pos, jnp.int32) if pos.ndim == 0 else pos
         if cfg.pos_embed == "sinusoidal":
-            b = x.shape[0]
-            x = x + L.sinusoidal_embedding(
-                jnp.full((b,), pos, jnp.int32), cfg.d_model).astype(x.dtype)
+            x = x + L.sinusoidal_embedding(pos_b, cfg.d_model).astype(x.dtype)
 
         new_head_caches = []
         for i, bp in enumerate(params["head_blocks"]):
             x, nc = _decode_block(bp, cache["head_layers"][i], cfg, rt, x,
-                                  pos, i, batch_axes, seq_axes, seq_len)
+                                  pos_b, i, batch_axes, seq_axes, seq_len)
             new_head_caches.append(nc)
 
         # caches ride in the scan CARRY with in-place dynamic_update_slice
@@ -267,7 +275,7 @@ def make_decode_step(cfg: ModelConfig, rt: Runtime, batch: int, seq_len: int):
             bps = jax.tree.map(lambda a: a[i], tuple(params["blocks"]))
             for j in range(period):
                 cache_j = jax.tree.map(lambda a: a[i], caches[j])
-                x, nc = _decode_block(bps[j], cache_j, cfg, rt, x, pos,
+                x, nc = _decode_block(bps[j], cache_j, cfg, rt, x, pos_b,
                                       head_n + j, batch_axes, seq_axes,
                                       seq_len)
                 upd = jax.tree.map(
@@ -309,3 +317,47 @@ def make_prefill_step(cfg: ModelConfig, rt: Runtime):
         return logits_head(params, cfg, hl)
 
     return prefill_step
+
+
+def make_prefill_kv_step(cfg: ModelConfig, rt: Runtime):
+    """Packed-buffer prefill that also RETURNS the per-layer KV rows, so
+    the serving engine can scatter them into a decode cache and continue
+    generation token-by-token (the prefill→decode handoff).
+
+    Attention-only patterns ('g'/'l') — SSM state handoff needs the
+    chunk-scan carry, which the packed forward does not expose.
+
+    Returns ``prefill_kv(params, batch) -> (hidden [T,d], head_kv, block_kv)``
+    where ``head_kv`` is a list (per head block) of per-token cache rows
+    ({"k": [T,g,dk], "v": ...} or {"kv_lat": [T,1,c]}) and ``block_kv`` a
+    tuple (per period position) of the same with a leading [n_periods]
+    dim — exactly the `decode_cache_structs` layout, minus the batch dim.
+    """
+    from repro.models.transformer import block_forward, embed_frontend
+    if not set(cfg.layer_pattern) <= {"g", "l"}:
+        raise NotImplementedError(
+            f"prefill KV capture needs an attention-only layer pattern, "
+            f"got {cfg.layer_pattern!r}")
+    period = len(cfg.layer_pattern)
+    head_n = head_layer_count(cfg)
+
+    def prefill_kv(params, batch):
+        seg, pos = batch["seg"], batch["pos"]
+        head_kv: list = []
+        x = embed_frontend(params, cfg, rt, batch, collect=head_kv)
+
+        def period_body(x, bp_stack):
+            kvs = []
+            for j in range(period):
+                col: list = []
+                x = block_forward(bp_stack[j], cfg, rt, x, seg, pos,
+                                  head_n + j, collect=col)
+                kvs.append(col[0])
+            return x, tuple(kvs)
+
+        x, block_kv = jax.lax.scan(period_body, x,
+                                   tuple(params["blocks"]))
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, head_kv, block_kv
+
+    return prefill_kv

@@ -369,3 +369,78 @@ def test_elastic_kill_shrink_resume():
                        capture_output=True, text=True, timeout=1800)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "ELASTIC_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# serve mode: the control plane as a request router
+# ---------------------------------------------------------------------------
+
+SERVE_DRIVER = r"""
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"
+import threading
+import numpy as np
+from repro.configs.registry import get_config
+from repro.core.planner import PlanSpec
+from repro.ctrl.controller import Controller, ControllerConfig
+from repro.launch.cluster import LocalCluster
+from repro import compat
+from repro.models.transformer import init_params
+from repro.parallel.sharding import Runtime
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.router import ServeClient
+
+cfg = get_config("llama3.2-3b").reduced()
+RT_KW = {"remat": "none", "kv_chunk": 16}
+SERVE = {"max_slots": 2, "max_context": 64, "prefill_capacity": 64}
+REQS = [(9, 4), (5, 3), (12, 5)]
+
+spec = PlanSpec.for_config(cfg, capacity=64, hdp=1, use_offload=False)
+ctl = Controller(None, cfg, spec, ControllerConfig(
+    num_workers=1, serve=SERVE, runtime_kw=RT_KW))
+cluster = LocalCluster(ctl, devices_per_worker=1)
+addr = cluster.start()
+ctl.wait_for_workers()
+th = threading.Thread(target=ctl.run_serve, daemon=True)
+th.start()
+
+cli = ServeClient(addr)
+rng = np.random.RandomState(0)
+prompts = [rng.randint(0, cfg.vocab_size, n) for n, _ in REQS]
+tags = [cli.submit(p, m) for p, (_, m) in zip(prompts, REQS)]
+outs = [cli.result(t, timeout=600) for t in tags]
+ctl.stop_serving()
+th.join(timeout=60)
+cli.close()
+cluster.shutdown()
+
+# the routed results match a local engine on the same params (same seed)
+mesh = compat.make_mesh((1, 1), ("data", "model"),
+                        axis_types=compat.auto_axis_types(2))
+compat.set_mesh(mesh)
+rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model", **RT_KW)
+params = init_params(__import__("jax").random.PRNGKey(0), cfg, rt)
+eng = ServeEngine(params, cfg, rt, ServeConfig(**SERVE))
+rids = [eng.submit(p, m) for p, (_, m) in zip(prompts, REQS)]
+eng.drain(max_steps=500)
+for rid, out, (_, m) in zip(rids, outs, REQS):
+    ref = eng.pool.get(rid).generated
+    assert out["tokens"] == ref, (out["tokens"], ref)
+    assert len(out["tokens"]) == m
+    assert out["telemetry"]["n_tokens"] == m
+    assert out["telemetry"]["worker"] == 0
+    assert out["telemetry"]["e2e_s"] > 0
+assert len(ctl.request_log) == len(REQS), ctl.request_log
+print("CTRL_SERVE_OK")
+"""
+
+
+def test_ctrl_serve_routes_requests():
+    """Acceptance: the controller/worker runtime serves traffic over the
+    same RPC channel it trains with — a ServeClient's routed results are
+    token-identical to a local ServeEngine on the same params, and the
+    controller logs per-request telemetry."""
+    r = subprocess.run([sys.executable, "-c", SERVE_DRIVER],
+                       capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CTRL_SERVE_OK" in r.stdout

@@ -48,6 +48,50 @@ def test_prefetch_immediate_failure_raises():
         list(mat._prefetched(produce))
 
 
+def test_tokens_vary_by_step_but_stay_deterministic():
+    """Regression: the token hash used to ignore ``step``, so every step
+    replayed identical content for a recycled seq_id.  Steps must differ;
+    the same (step, seq_id, range) must stay reproducible across dataset
+    instances (restart determinism)."""
+    ds = _dataset()
+    a = ds.tokens(0, seq_id=3, start=0, end=64)
+    b = ds.tokens(1, seq_id=3, start=0, end=64)
+    assert not np.array_equal(a, b)
+    ds2 = SyntheticDataset(DIST, CFG.vocab_size, tokens_per_step=4096,
+                           context=2048)
+    np.testing.assert_array_equal(a, ds2.tokens(0, seq_id=3, start=0,
+                                                end=64))
+    np.testing.assert_array_equal(b, ds2.tokens(1, seq_id=3, start=0,
+                                                end=64))
+    assert a.min() >= 0 and a.max() < CFG.vocab_size
+
+
+def test_prefetch_abandoned_consumer_leaves_no_thread():
+    """Regression: a consumer that closes the generator mid-stream
+    (error in the step loop, elastic reconfig) used to leave the producer
+    thread blocked forever on a full queue."""
+    import threading
+    import time
+
+    mat = WaveMaterializer(_dataset(), CFG, capacity=512, prefetch=1)
+
+    def produce():
+        for i in range(1000):
+            yield i
+
+    before = set(threading.enumerate())
+    it = mat._prefetched(produce)
+    assert next(it) == 0
+    it.close()                       # abandon mid-stream (GeneratorExit)
+    deadline = time.monotonic() + 5.0
+    def alive():                     # any thread the iterator spawned
+        return [t for t in threading.enumerate()
+                if t not in before and t.is_alive()]
+    while alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not alive()
+
+
 def test_materialized_waves_match_plan():
     """Every wave's buffers cover exactly the planned pieces (labels are
     next-token within the original sequence)."""

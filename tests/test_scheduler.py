@@ -279,3 +279,38 @@ def test_calibrator_skips_compile_outliers():
     before = calib.rank_speed()[2]
     calib.observe(costs, seconds=1000.0)    # 1000x: compile/GC spike
     assert calib.rank_speed()[2] == pytest.approx(before)
+
+
+def test_first_sample_spike_does_not_poison_scale():
+    """Regression: the outlier gate used to be inactive on the very first
+    observation, so a GC/page-in spike SEEDED the scale EMA and every
+    honest sample after it was attributed against the poisoned value
+    (speeds exploded toward the clip ceiling).  With the rolling-median
+    scale the spike is out-voted during warmup and uniform honest walls
+    keep every rank at ~1."""
+    calib = OnlineCalibrator(SPEC.coeffs, HDP, CFG.num_layers)
+    costs = np.ones(HDP)                     # balanced: every rank blamed
+    calib.observe(costs, seconds=100.0)      # spike lands FIRST
+    for _ in range(8):
+        calib.observe(costs, seconds=1.0)    # honest: measured == modeled
+    np.testing.assert_allclose(calib.rank_speed(), np.ones(HDP), atol=0.05)
+    # and the spike never became the reference scale
+    assert calib._scale == pytest.approx(1.0)
+
+
+def test_wall_channel_attributes_against_pre_update_scale():
+    """Regression: the wall channel computed rel = scale/ratio AFTER
+    EMA-ing the current ratio into the scale, so every sample was partly
+    compared against itself and speeds were biased toward 1.  A 2x-slow
+    wall observation after a clean warmup must move the blamed rank's raw
+    estimate to exactly ema*1 + (1-ema)*(1/2) = 0.75 (the self-biased
+    version gave 0.875)."""
+    calib = OnlineCalibrator(SPEC.coeffs, HDP, CFG.num_layers)
+    costs = np.full(HDP, 0.1)
+    costs[2] = 1.0                           # rank 2 is the bottleneck
+    for _ in range(5):
+        calib.observe(costs, seconds=1.0)    # warmup at true scale 1
+    calib.observe(costs, seconds=2.0)        # bottleneck ran 2x slow
+    assert calib._speed[2] == pytest.approx(0.75)
+    np.testing.assert_allclose(np.delete(calib._speed, 2),
+                               np.ones(HDP - 1))

@@ -1,5 +1,7 @@
 """Decode-vs-forward consistency: autoregressive decode through the cache
-must reproduce the packed-forward logits position by position."""
+must reproduce the packed-forward logits position by position — and the
+serving engine (continuous batching over the planner) must reproduce
+per-request decoding exactly."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +9,8 @@ import pytest
 
 from repro.configs.registry import get_config
 from repro.models.transformer import forward_hidden, init_params, logits_head
-from repro.train.serve_step import init_decode_cache, make_decode_step
+from repro.train.serve_step import (decode_axes, init_decode_cache,
+                                    make_decode_step)
 
 ARCHS = ["llama3.2-3b", "gemma2-9b", "rwkv6-7b", "jamba-1.5-large-398b",
          "deepseek-v2-lite-16b", "qwen3-moe-30b-a3b"]
@@ -75,3 +78,122 @@ def test_sliding_window_ring_buffer(rt1):
     np.testing.assert_allclose(np.asarray(dec, np.float32),
                                np.asarray(ref_logits, np.float32),
                                atol=0.08, rtol=0.08)
+
+
+# ---------------------------------------------------------------------------
+# serving engine (continuous batching)
+# ---------------------------------------------------------------------------
+
+def test_decode_axes_uneven_pool():
+    """Regression: batch used to go to the HDP axes whenever it was
+    >= hdp_size, so a 7-request pool on 8 ranks (or 12 on 8) hit
+    shard_map's opaque non-divisibility error.  Only exact tilings shard
+    the batch; everything else falls back to sequence sharding."""
+    from types import SimpleNamespace
+    cfg = get_config("llama3.2-3b").reduced()
+    rt = SimpleNamespace(hdp_size=8, hdp_axes=("dp",), model_axis="tp")
+    shard_b = (("dp",), ("tp",))
+    shard_s = ((), ("dp", "tp"))
+    assert decode_axes(cfg, rt, 8) == shard_b
+    assert decode_axes(cfg, rt, 16) == shard_b
+    assert decode_axes(cfg, rt, 7) == shard_s       # small pool
+    assert decode_axes(cfg, rt, 12) == shard_s      # >= hdp, not a tiling
+
+
+def _engine(cfg, rt, params, **kw):
+    from repro.serve import ServeConfig, ServeEngine
+    scfg = ServeConfig(max_slots=kw.pop("max_slots", 4),
+                       max_context=kw.pop("max_context", 64),
+                       prefill_capacity=kw.pop("prefill_capacity", 64),
+                       collect_logits=True, **kw)
+    return ServeEngine(params, cfg, rt, scfg)
+
+
+def _reference_rows(params, cfg, rt, req):
+    """Teacher-forced packed forward over prompt + generated[:-1] — the
+    per-request ground truth the batched engine must match."""
+    toks = list(req.prompt) + req.generated[:-1]
+    t = len(toks)
+    h = forward_hidden(params, cfg, rt,
+                       {"tokens": jnp.asarray(toks, jnp.int32),
+                        "seg": jnp.ones(t, jnp.int32),
+                        "pos": jnp.arange(t)})
+    return np.asarray(logits_head(params, cfg, h))[req.plen - 1:]
+
+
+def test_engine_pool_parity(rt1):
+    """A continuously-batched pool (mixed lengths, shared decode slab)
+    must reproduce per-request decoding: logits within the usual decode
+    tolerance and greedy tokens EXACTLY."""
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg, rt1)
+    eng = _engine(cfg, rt1, params)
+    rng = np.random.RandomState(0)
+    rids = [eng.submit(rng.randint(0, cfg.vocab_size, plen), mnt)
+            for plen, mnt in [(9, 5), (17, 4), (5, 6)]]
+    done = eng.drain(max_steps=200)
+    assert sorted(r.rid for r in done) == sorted(rids)
+    for rid in rids:
+        req = eng.pool.get(rid)
+        ref = _reference_rows(params, cfg, rt1, req)
+        got = np.stack(req.logits)
+        np.testing.assert_allclose(got, ref, atol=0.08, rtol=0.08)
+        assert [int(r.argmax()) for r in ref] == req.generated
+    # per-request telemetry is recorded for every retired request
+    assert sorted(rec["rid"] for rec in eng.records) == sorted(rids)
+    assert all(rec["n_tokens"] == len(eng.pool.get(rec["rid"]).generated)
+               for rec in eng.records)
+
+
+def test_engine_admits_into_running_batch(rt1):
+    """Continuous batching: a request that arrives while the slab is
+    busy takes the first freed slot WITHOUT disturbing the still-running
+    request, whose output must stay identical to its solo reference."""
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(1), cfg, rt1)
+    eng = _engine(cfg, rt1, params, max_slots=2)
+    rng = np.random.RandomState(1)
+    a = eng.submit(rng.randint(0, cfg.vocab_size, 6), 4)   # finishes early
+    b = eng.submit(rng.randint(0, cfg.vocab_size, 8), 12)  # long-running
+    for _ in range(2):                      # a now holds 3 of 4 tokens
+        eng.step()
+    c = eng.submit(rng.randint(0, cfg.vocab_size, 7), 4)   # arrives late
+    assert eng.n_live == 2                  # slab full: c must wait
+    eng.step()                              # a finishes here (4th token)
+    eng.step()                              # ... freeing a slot for c
+    rb, rc = eng.pool.get(b), eng.pool.get(c)
+    assert rc.t_admit is not None           # c admitted ...
+    assert rb.t_done is None                # ... while b still runs
+    eng.drain(max_steps=100)
+    for rid in (a, b, c):
+        req = eng.pool.get(rid)
+        ref = _reference_rows(params, cfg, rt1, req)
+        assert [int(r.argmax()) for r in ref] == req.generated
+        np.testing.assert_allclose(np.stack(req.logits), ref,
+                                   atol=0.08, rtol=0.08)
+
+
+def test_engine_sliding_window_wraparound(rt1):
+    """Prompts longer than the window must land in the ring caches the
+    way decode would have written them — generation past the wrap point
+    still matches the windowed forward."""
+    cfg = get_config("gemma2-9b").reduced()    # window=16
+    params = init_params(jax.random.PRNGKey(2), cfg, rt1)
+    eng = _engine(cfg, rt1, params, max_slots=2)
+    rng = np.random.RandomState(2)
+    rid = eng.submit(rng.randint(0, cfg.vocab_size, 24), 10)  # 24 > 16
+    eng.drain(max_steps=100)
+    req = eng.pool.get(rid)
+    ref = _reference_rows(params, cfg, rt1, req)
+    assert [int(r.argmax()) for r in ref] == req.generated
+    np.testing.assert_allclose(np.stack(req.logits), ref,
+                               atol=0.08, rtol=0.08)
+
+
+def test_engine_rejects_ssm_patterns(rt1):
+    """SSM decode state cannot be captured from the packed forward —
+    the engine must refuse loudly, not corrupt caches."""
+    from repro.serve import ServeConfig, ServeEngine
+    cfg = get_config("rwkv6-7b").reduced()
+    with pytest.raises(NotImplementedError):
+        ServeEngine({}, cfg, rt1, ServeConfig())
