@@ -1,0 +1,272 @@
+"""Observability overhead + trace-validity benchmark → ``BENCH_obs.json``.
+
+Two measurements:
+
+* **Tracing overhead.**  Cost of the span layer on the hot path, as a
+  fraction of an untraced CPU training step: events-per-step measured
+  on the real trainer x per-span cost from a tight loop / median clean
+  (no-compile) untraced step wall.  Gate (CI): overhead < 2% of a step.
+  The disabled path must stay effectively free (one attribute check
+  returning a shared no-op singleton — its per-call cost is reported
+  too), and the enabled path is a handful of dict appends per dispatch
+  against a multi-ms step.
+
+* **Trace validity on 8 devices.**  A subprocess (host platform forced
+  to 8 CPU devices, same re-exec trick as kernel_bench) runs an hdp=4
+  trainer for two steps and a serve engine through a few requests with
+  tracing on, exports the Chrome ``trace_event`` JSON, and validates it
+  with `repro.obs.validate_chrome_trace`: required keys on every event,
+  strict nesting per (pid, tid) lane, one "wave" span per dispatched
+  wave, and at least one request's prefill→decode lifecycle.
+
+Run: ``python -m benchmarks.obs_bench [--skip-validate] [--out PATH]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+SNAPSHOT_PATH = "BENCH_obs.json"
+OVERHEAD_GATE = 0.02
+_CHILD_FLAG = "--validate-child"
+
+
+def _mk_trainer(sched_async: bool = False):
+    from repro import compat
+    from repro.configs.registry import get_config
+    from repro.data.distribution import LengthDistribution
+    from repro.data.loader import GlobalScheduler, SyntheticDataset
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.sharding import single_device_runtime
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("llama3.2-3b").reduced()
+    rt = single_device_runtime(remat="none")
+    compat.set_mesh(rt.mesh)
+    dist = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, tokens_per_step=2048,
+                          context=1024)
+    sched = GlobalScheduler(ds, cfg, capacity=256, hdp=1,
+                            use_offload=False, sched_async=sched_async)
+    return Trainer(cfg, rt, AdamWConfig(lr=1e-3, total_steps=64),
+                   sched, TrainerConfig(capacity=256,
+                                        sched_async=sched_async))
+
+
+def tracing_overhead(steps: int = 5) -> dict:
+    """Span-layer cost per step as a fraction of an untraced CPU step.
+
+    Whole-step A/B walls cannot resolve a 2% effect on this workload:
+    steps differ in wave count and compile events by 2x+, and CI
+    machine load adds more.  The gated number is therefore composed
+    from robust pieces -- (events recorded per step, measured on the
+    real trainer) x (per-span cost, tight loop) / (median untraced
+    step wall, compile-polluted samples discarded).  The raw A/B step
+    medians ride along as informational fields only.
+    """
+    import numpy as np
+
+    from repro.obs import Tracer, get_metrics, get_tracer, set_tracer
+
+    tr = _mk_trainer()
+    for _ in range(4):                 # pay the common jit compiles up front
+        tr.train_step()
+
+    miss = get_metrics().counter("trainer.compile_miss")
+
+    def measure(n):
+        """Median clean-step wall + number of steps actually run; a step
+        that compiled (``trainer.compile_miss`` advanced) is not clean."""
+        clean, dirty = [], []
+        ran = 0
+        for _ in range(2 * n):
+            m0 = miss.value
+            t0 = time.perf_counter()
+            tr.train_step()
+            dt = time.perf_counter() - t0
+            ran += 1
+            (clean if miss.value == m0 else dirty).append(dt)
+            if len(clean) >= n:
+                break
+        return float(np.median(clean or dirty)), ran
+
+    prev = get_tracer()
+    tracer = Tracer(enabled=True)
+    try:
+        set_tracer(tracer)
+        on, ran_on = measure(steps)
+        n_events = len(tracer.snapshot())
+        tracer.enabled = False
+        off, _ = measure(steps)
+
+        # tight-loop per-span cost, enabled and (the default) disabled
+        n_loop = 20_000
+        tracer.enabled = True
+        tracer.clear()
+        t0 = time.perf_counter()
+        for _ in range(n_loop):
+            with tracer.span("bench", i=0):
+                pass
+        span_s = (time.perf_counter() - t0) / n_loop
+        tracer.enabled = False
+        t0 = time.perf_counter()
+        for _ in range(n_loop):
+            with tracer.span("bench", i=0):
+                pass
+        span_off_s = (time.perf_counter() - t0) / n_loop
+    finally:
+        set_tracer(prev)
+
+    events_per_step = n_events / max(ran_on, 1)
+    frac = events_per_step * span_s / off if off > 0 else 0.0
+    return {"step_ms_traced": round(on * 1e3, 3),      # informational
+            "step_ms_untraced": round(off * 1e3, 3),
+            "events_per_step": round(events_per_step, 1),
+            "span_cost_us": round(span_s * 1e6, 3),
+            "span_cost_us_disabled": round(span_off_s * 1e6, 4),
+            "overhead_frac": round(frac, 7),
+            "events_recorded": n_events,
+            "steps": steps, "gate": OVERHEAD_GATE,
+            "gate_ok": bool(frac < OVERHEAD_GATE)}
+
+
+# -- 8-device trace validation (subprocess) -----------------------------
+def _validate_child(trace_out: str) -> None:
+    """Runs inside the forced-8-device subprocess: trace an hdp=4 trainer
+    and a serve engine, export, validate, print one JSON summary line."""
+    import jax
+    import numpy as np
+
+    from repro import compat
+    from repro.configs.registry import get_config
+    from repro.data.distribution import LengthDistribution
+    from repro.data.loader import GlobalScheduler, SyntheticDataset
+    from repro.models.transformer import init_params
+    from repro.obs import get_tracer, validate_chrome_trace
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.sharding import Runtime, single_device_runtime
+    from repro.serve import ServeConfig, ServeEngine
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    assert len(jax.devices()) >= 8, jax.devices()
+    tracer = get_tracer()
+    tracer.enabled = True
+    cfg = get_config("llama3.2-3b").reduced()
+    mesh = compat.make_mesh((4, 2), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
+    compat.set_mesh(mesh)
+    rt = Runtime(mesh=mesh, hdp_axes=("data",), model_axis="model",
+                 remat="none", kv_chunk=64)
+    dist = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, tokens_per_step=2048,
+                          context=1024)
+    sched = GlobalScheduler(ds, cfg, capacity=256, hdp=4,
+                            use_offload=False)
+    tr = Trainer(cfg, rt, AdamWConfig(lr=1e-3, total_steps=8), sched,
+                 TrainerConfig(capacity=256))
+    n_waves = 0
+    for _ in range(2):
+        rec = tr.train_step()
+        n_waves += rec["waves"]
+
+    # serve leg: a few requests through prefill -> decode on this host
+    rt1 = single_device_runtime(remat="none")
+    compat.set_mesh(rt1.mesh)
+    params = init_params(jax.random.PRNGKey(0), cfg, rt1)
+    eng = ServeEngine(params, cfg, rt1,
+                      ServeConfig(max_slots=2, max_context=64,
+                                  prefill_capacity=64))
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        eng.submit(rng.randint(1, cfg.vocab_size, 8), 4)
+    finished = eng.drain()
+
+    doc = tracer.to_chrome(trace_out)
+    ok, problems = validate_chrome_trace(
+        doc, require_names=("plan", "materialize", "wave", "apply",
+                            "admit", "prefill", "decode"))
+    wave_spans = sum(1 for e in doc["traceEvents"]
+                     if e.get("ph") == "X" and e["name"] == "wave")
+    if wave_spans != n_waves:
+        ok = False
+        problems.append(f"{n_waves} waves dispatched but {wave_spans} "
+                        f"'wave' spans recorded")
+    print(json.dumps({"ok": ok, "problems": problems[:8],
+                      "n_events": len(doc["traceEvents"]),
+                      "n_wave_spans": wave_spans,
+                      "devices": len(jax.devices()),
+                      "serve_finished": len(finished)}))
+
+
+def trace_validation(trace_out: str = "trace_obs_bench.json") -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env.pop("REPRO_TRACE", None)       # child enables programmatically
+    r = subprocess.run([sys.executable, "-m", "benchmarks.obs_bench",
+                        _CHILD_FLAG, "--trace-out", trace_out],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-800:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+# -- snapshot / harness wiring ------------------------------------------
+def snapshot(path: str = SNAPSHOT_PATH, skip_validate: bool = False,
+             steps: int = 5) -> dict:
+    snap = {"overhead": tracing_overhead(steps=steps)}
+    if not skip_validate:
+        snap["trace_8dev"] = trace_validation()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return snap
+
+
+def rows_from(snap: dict) -> list:
+    ov = snap["overhead"]
+    rows = [("obs.tracing_overhead", ov["step_ms_traced"] * 1e3,
+             f"overhead_frac={ov['overhead_frac']}")]
+    tv = snap.get("trace_8dev")
+    if tv:
+        rows.append(("obs.trace_8dev_valid", 0.0,
+                     f"ok={tv['ok']} events={tv['n_events']}"))
+    return rows
+
+
+def run() -> list:
+    return rows_from(snapshot())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=SNAPSHOT_PATH)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--skip-validate", action="store_true",
+                    help="overhead only (no 8-device subprocess)")
+    ap.add_argument(_CHILD_FLAG, action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--trace-out", default="trace_obs_bench.json")
+    args = ap.parse_args()
+    if args.validate_child:
+        _validate_child(args.trace_out)
+        return
+    snap = snapshot(args.out, skip_validate=args.skip_validate,
+                    steps=args.steps)
+    print(json.dumps(snap, indent=1, sort_keys=True))
+    if not snap["overhead"]["gate_ok"]:
+        raise SystemExit(
+            f"tracing overhead {snap['overhead']['overhead_frac']:.3%} "
+            f"exceeds the {OVERHEAD_GATE:.0%} gate")
+    tv = snap.get("trace_8dev")
+    if tv is not None and not tv["ok"]:
+        raise SystemExit(f"8-device trace invalid: {tv['problems']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,10 @@ kernel-throughput snapshot (local + ring attention tokens/s, Pallas
 interpret vs jnp oracle; see benchmarks/kernel_bench.py) — and
 ``BENCH_serve.json`` — the serving snapshot (continuous vs static
 admission on a Poisson bimodal mix: latency p50/p99, tok/s, makespan;
-see benchmarks/serve_bench.py) — so the repo's perf trajectory is
-recorded in-tree.
+see benchmarks/serve_bench.py) — and ``BENCH_obs.json`` — the
+observability snapshot (tracing overhead vs an untraced step, 8-device
+Chrome-trace validity; see benchmarks/obs_bench.py) — so the repo's
+perf trajectory is recorded in-tree.
 """
 from __future__ import annotations
 
@@ -135,6 +137,14 @@ def main() -> None:
     except Exception as e:
         rows.append(("benchmarks.ctrl_bench.ERROR", 0.0, repr(e)[:120]))
         sys.stderr.write(f"[ctrl_snapshot] FAILED: {e!r}\n")
+    try:
+        from benchmarks import obs_bench
+        rows.extend(obs_bench.run())
+        sys.stderr.write(
+            f"[obs_snapshot] -> {obs_bench.SNAPSHOT_PATH}\n")
+    except Exception as e:
+        rows.append(("benchmarks.obs_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[obs_snapshot] FAILED: {e!r}\n")
     t0 = time.perf_counter()
     try:
         rows.extend(kernels_snapshot())

@@ -32,9 +32,11 @@ heartbeat timeout (`MembershipChange`), handled by the elastic supervisor.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -45,9 +47,12 @@ from repro.core.planner import PlanSpec
 from repro.ctrl import elastic
 from repro.ctrl.rpc import Channel, Listener
 from repro.data.loader import WaveMaterializer
+from repro.obs import get_metrics, get_recorder, get_tracer
 from repro.parallel.pipeline import pipeline_rounds, rounds_splitter
 from repro.sched.calibrate import OnlineCalibrator, fit_length_of
 from repro.sched.service import SchedulerService
+
+log = logging.getLogger("repro.ctrl")
 
 
 @dataclass
@@ -116,6 +121,11 @@ class WorkerHandle:
         self.progress_seen = time.monotonic()   # keep arriving from a
         self.alive = True            # hung trainer (dedicated thread),
         self.reason = ""             # but this counter stops moving
+        self.streamed: deque = deque(maxlen=512)   # per-wave telemetry
+                                     # records that arrived on heartbeat
+                                     # frames (mid-step visibility; the
+                                     # authoritative copy still comes
+                                     # with step_done)
         self._thread: Optional[threading.Thread] = None
 
     def start_reader(self) -> None:
@@ -129,6 +139,15 @@ class WorkerHandle:
                         if p is not None and p != self.progress:
                             self.progress = p
                             self.progress_seen = self.last_seen
+                        tel = msg.get("telemetry")
+                        if tel:
+                            self.streamed.extend(tel)
+                            get_metrics().counter(
+                                "ctrl.waves_streamed").inc(len(tel))
+                            get_recorder().record(
+                                "stream", wid=self.wid, n=len(tel),
+                                step=tel[-1].get("step"),
+                                t_wall=msg.get("t_wall"))
                         continue
                     self.progress_seen = self.last_seen   # any reply is
                     self.inbox.put(msg)                   # forward motion
@@ -336,8 +355,18 @@ class Controller:
             while self.step < self.ccfg.steps:
                 try:
                     rec = self._one_step()
-                except elastic.MembershipChange:
+                except elastic.MembershipChange as mc:
+                    # postmortem BEFORE recovery mutates the world: the
+                    # ring holds the dispatches/streams leading up to the
+                    # death
+                    h = mc.handle
+                    get_recorder().record(
+                        "membership_change", step=self.step,
+                        worker=None if h is None else h.wid,
+                        reason=str(mc))
+                    get_recorder().dump("membership_change")
                     self.step = elastic.recover(self)
+                    get_metrics().counter("ctrl.recoveries").inc()
                     continue
                 self.history.append(rec)
                 if on_step is not None:
@@ -350,27 +379,38 @@ class Controller:
     def _one_step(self) -> Dict:
         self._check_membership()      # deaths between steps recover too
         step = self.step
-        plan, waves = self.service.get_step(step)
-        if self.materializer is not None and waves is None:
-            if self.spec.num_stages > 1:
-                rounds = pipeline_rounds(plan, self.ccfg.max_round_waves)
-                waves = [self.materializer.materialize_round(step, plan, rd)
-                         for rd in rounds]
-            else:
-                waves = [self.materializer.materialize(step, w)
-                         for w in plan.waves]
-        msg = {"type": "plan", "step": step, "plan": plan, "waves": waves,
-               "state": self.state_dict()}
-        live = self.live_handles()
-        if not live:
-            raise elastic.MembershipChange(None)
-        for h in live:
-            if not h.send(msg):
-                raise elastic.MembershipChange(h)
-        dones = {h: self._await(h, "step_done", step=step) for h in live}
-        self._ingest_telemetry(step, plan, dones)
+        tr = get_tracer()
+        with tr.span("ctrl_step", step=step):
+            with tr.span("plan", step=step):
+                plan, waves = self.service.get_step(step)
+            if self.materializer is not None and waves is None:
+                with tr.span("materialize", step=step):
+                    if self.spec.num_stages > 1:
+                        rounds = pipeline_rounds(plan,
+                                                 self.ccfg.max_round_waves)
+                        waves = [self.materializer.materialize_round(
+                                     step, plan, rd) for rd in rounds]
+                    else:
+                        waves = [self.materializer.materialize(step, w)
+                                 for w in plan.waves]
+            msg = {"type": "plan", "step": step, "plan": plan,
+                   "waves": waves, "state": self.state_dict()}
+            live = self.live_handles()
+            if not live:
+                raise elastic.MembershipChange(None)
+            for h in live:
+                if not h.send(msg):
+                    raise elastic.MembershipChange(h)
+            get_recorder().record("dispatch", step=step,
+                                  waves=len(plan.waves),
+                                  workers=len(live))
+            with tr.span("await_step", step=step, workers=len(live)):
+                dones = {h: self._await(h, "step_done", step=step)
+                         for h in live}
+            self._ingest_telemetry(step, plan, dones)
         rec0 = next(iter(dones.values()))
         self.step = step + 1
+        get_metrics().counter("ctrl.steps").inc()
         return {"step": self.step, "loss": rec0["loss"],
                 "grad_norm": rec0.get("grad_norm"),
                 "waves": len(plan.waves), "hdp": self.spec.hdp,
@@ -387,8 +427,18 @@ class Controller:
             self.service.warm_keys(keys)
         if not self.ccfg.calibrate:
             return
-        n_dispatch = min((len(m.get("telemetry") or [])
-                          for m in dones.values()), default=0)
+        counts = [len(m.get("telemetry") or []) for m in dones.values()]
+        n_dispatch = min(counts, default=0)
+        # misaligned reports truncate to the shortest worker's count —
+        # count what that throws away instead of dropping it silently
+        dropped = sum(c - n_dispatch for c in counts)
+        if dropped:
+            get_metrics().counter("ctrl.telemetry_dropped").inc(dropped)
+            log.warning(
+                "step %d: telemetry misaligned across workers "
+                "(counts=%s), dropping %d record(s)", step, counts,
+                dropped)
+        mx = get_metrics()
         pp = self.spec.num_stages > 1
         rounds = pipeline_rounds(plan, self.ccfg.max_round_waves) \
             if pp else None
@@ -400,6 +450,13 @@ class Controller:
             parts = [(r["ranks"], r["times"]) for r in recs]
             fresh = any(r["fresh"] for r in recs)
             exact = all(r.get("exact", False) for r in recs)
+            if exact and not fresh:
+                # per-wave straggler signal: spread of per-rank walls
+                covered = np.concatenate(
+                    [np.asarray(t, float) for _, t in parts])
+                if covered.size >= 2:
+                    mx.histogram("ctrl.wave_gap_s").observe(
+                        float(covered.max() - covered.min()))
             self.calib.ingest(costs, parts, fresh=fresh, exact=exact,
                               fit_length=fit_length_of(waves_i))
         if self.calib.n_observed > 0:

@@ -34,6 +34,8 @@ import threading
 import time
 from typing import Optional
 
+from repro.obs import get_recorder
+
 
 class MembershipChange(Exception):
     """A worker left the cluster mid-step; the step aborts and the
@@ -72,10 +74,14 @@ class ElasticSupervisor:
                 if now - h.last_seen > self.timeout:
                     h.mark_dead(
                         f"heartbeat timeout ({self.timeout:.1f}s)")
+                    get_recorder().record("worker_dead", wid=h.wid,
+                                          reason=h.reason)
                 elif self.progress_timeout > 0 \
                         and now - h.progress_seen > self.progress_timeout:
                     h.mark_dead("progress stall "
                                 f"({self.progress_timeout:.1f}s)")
+                    get_recorder().record("worker_dead", wid=h.wid,
+                                          reason=h.reason)
 
     def stop(self) -> None:
         self._stop.set()
@@ -120,6 +126,10 @@ def recover(controller) -> int:
 
     resume, data_state = ctl._latest_valid_state()
     ctl._load_state(data_state, rank_map=rank_map, src_world=prev_hdp)
+    get_recorder().record("elastic_recover", new_hdp=new_hdp,
+                          prev_hdp=prev_hdp, resume_step=resume,
+                          survivors=[h.wid for h in survivors],
+                          dead=[h.wid for h in dead])
     if ctl.ccfg.calibrate and ctl.calib.n_observed > 0:
         ctl.service.update_rank_speed(ctl.calib.rank_speed())
 

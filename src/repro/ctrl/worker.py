@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import threading
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -37,9 +38,36 @@ import numpy as np
 from repro import compat
 from repro.ctrl.rpc import Channel, connect
 from repro.launch.mesh import make_pipeline_mesh
+from repro.obs import (configure as obs_configure, get_recorder,
+                       get_tracer, monotime)
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import Runtime
 from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_telemetry_record(ranks, measured, fresh: bool,
+                          step: Optional[int] = None) -> Dict:
+    """One dispatched wave (or pipelined round) as a wire record.  A
+    scalar measurement (real wall clock) is this process's local time —
+    attributed to every owned rank, which is exactly what a per-host
+    agent can observe; a vector (fault-injection clock) is sliced to the
+    owned ranks.  Every record is double-stamped — ``t_mono`` for
+    intra-process ordering, ``t_wall`` for cross-worker trace alignment
+    (monotonic clocks share no epoch across processes)."""
+    exact = np.ndim(measured) > 0
+    if exact:
+        times = np.asarray(measured, float)[list(ranks)]
+    else:
+        times = np.full(len(ranks), float(measured))
+    rec = {"ranks": list(ranks),
+           "times": [float(t) for t in times],
+           "exact": exact,        # per-rank clock vs the wall attributed
+                                  # to every owned rank
+           "fresh": bool(fresh),
+           "t_mono": monotime(), "t_wall": time.time()}
+    if step is not None:
+        rec["step"] = int(step)
+    return rec
 
 
 class Reconfigure(Exception):
@@ -109,6 +137,8 @@ class WorkerAgent:
         self.ranks: List[int] = []
         self.trainer: Optional[Trainer] = None
         self._telemetry: List[Dict] = []
+        self._stream_pending: List[Dict] = []   # per-wave records not yet
+        self._stream_lock = threading.Lock()    # shipped on a heartbeat
         self._slow_ranks: Optional[Dict[int, float]] = None
         self._progress = 0           # monotonic dispatch counter carried
                                      # by heartbeats: the supervisor's
@@ -124,6 +154,15 @@ class WorkerAgent:
         cfg = self.chan.recv()
         assert cfg.get("type") == "config", cfg
         self.cfg_msg = cfg
+        ranks = cfg.get("ranks") or []
+        # give this process its own trace/recorder lane, so merged
+        # cross-worker postmortems tell the agents apart
+        lane = f"worker[{ranks[0]}..{ranks[-1]}]" if ranks else "worker"
+        obs_configure(trace_process=lane,
+                      trace_pid=(ranks[0] + 1) if ranks else None)
+        get_recorder().process = lane
+        get_recorder().record("config", ranks=list(ranks),
+                              hdp=cfg.get("hdp"), serve=bool(cfg.get("serve")))
         self._start_heartbeat(cfg.get("heartbeat_interval", 0.5))
         try:
             if cfg.get("serve"):
@@ -138,6 +177,9 @@ class WorkerAgent:
                     self._step_once()
                 except Reconfigure as rc:
                     m = rc.msg
+                    get_recorder().record("reconfig", hdp=m.get("hdp"),
+                                          ranks=list(m.get("ranks", [])),
+                                          resume_step=m.get("resume_step"))
                     self._remap_slow_ranks(m.get("rank_map"))
                     self._build_trainer(hdp=m["hdp"], ranks=m["ranks"],
                                         ckpt_owner=m["ckpt_owner"],
@@ -148,19 +190,37 @@ class WorkerAgent:
                     self._final_checkpoint()
                     self.chan.send({"type": "bye"})
                     return
+        except BaseException as e:
+            # postmortem before the process dies: what the agent was
+            # doing in the seconds before the loop blew up
+            get_recorder().record("worker_uncaught", exc=repr(e))
+            get_recorder().dump("worker_uncaught")
+            raise
         finally:
             self._hb_stop.set()
             self.chan.close()
 
     def _start_heartbeat(self, interval: float) -> None:
         def beat():
+            get_tracer().set_thread_name("heartbeat")
             while not self._hb_stop.wait(interval):
+                with self._stream_lock:
+                    pending, self._stream_pending = \
+                        self._stream_pending, []
                 try:
+                    # per-WAVE telemetry rides every beat (not only the
+                    # end-of-step step_done): the controller sees dispatch
+                    # progress mid-step, double-stamped for cross-worker
+                    # alignment
                     self.chan.send({"type": "heartbeat",
-                                    "progress": self._progress})
+                                    "progress": self._progress,
+                                    "t_mono": monotime(),
+                                    "t_wall": time.time(),
+                                    "telemetry": pending})
                 except (OSError, EOFError):
                     return
-        self._hb_thread = threading.Thread(target=beat, daemon=True)
+        self._hb_thread = threading.Thread(target=beat, daemon=True,
+                                           name="heartbeat")
         self._hb_thread.start()
 
     # -- construction --------------------------------------------------
@@ -253,22 +313,18 @@ class WorkerAgent:
 
     def _on_dispatch(self, waves, measured, fresh: bool) -> None:
         """One dispatched wave (or pipelined round): record the wall times
-        of the ranks this worker owns.  A scalar measurement (real wall
-        clock) is this process's local time — attributed to every owned
-        rank, which is exactly what a per-host agent can observe; a vector
-        (fault-injection clock) is sliced to the owned ranks."""
+        of the ranks this worker owns (`make_telemetry_record`).  The
+        record lands in two places — ``_telemetry``, the authoritative
+        end-of-step batch `_step_once` ships with step_done (the
+        calibrator's input), and ``_stream_pending``, drained onto the
+        next heartbeat frame for mid-step controller visibility."""
         self._progress += 1          # hang detection: heartbeats carry it
-        exact = np.ndim(measured) > 0
-        if exact:
-            times = np.asarray(measured, float)[self.ranks]
-        else:
-            times = np.full(len(self.ranks), float(measured))
-        self._telemetry.append({"ranks": list(self.ranks),
-                                "times": [float(t) for t in times],
-                                "exact": exact,   # per-rank clock vs the
-                                                  # wall attributed to
-                                                  # every owned rank
-                                "fresh": bool(fresh)})
+        rec = make_telemetry_record(
+            self.ranks, measured, fresh,
+            step=self.trainer.step if self.trainer is not None else None)
+        self._telemetry.append(rec)
+        with self._stream_lock:
+            self._stream_pending.append(rec)
 
     def _step_once(self) -> None:
         self._telemetry = []
@@ -278,6 +334,7 @@ class WorkerAgent:
         self.chan.send({"type": "step_done", "step": rec["step"] - 1,
                         "loss": rec["loss"],
                         "grad_norm": rec["grad_norm"],
+                        "t_mono": monotime(), "t_wall": time.time(),
                         "keys": keys, "telemetry": self._telemetry})
 
     # -- serve mode ----------------------------------------------------

@@ -7,6 +7,7 @@ configs (jax.distributed initialization is the standard pod runtime).
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro import compat
 from repro.configs.registry import get_config
@@ -117,10 +118,38 @@ def main():
                     help="controller materializes wave buffers and ships "
                          "them with the plan (paper's remote dataloader); "
                          "default: workers build buffers from metadata")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing (repro.obs; worker "
+                         "subprocesses inherit via REPRO_TRACE=1)")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the Chrome trace_event JSON here on "
+                         "exit (open in https://ui.perfetto.dev); "
+                         "implies --trace")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append one JSONL metrics record per step here")
+    ap.add_argument("--report", action="store_true",
+                    help="print the observability dashboard on exit")
     args = ap.parse_args()
 
+    from repro.obs import (configure as obs_configure, get_metrics,
+                           get_recorder, get_tracer, render_report)
+    if args.trace or args.trace_out:
+        obs_configure(trace=True, trace_process="main")
+        os.environ["REPRO_TRACE"] = "1"     # --ctrl workers inherit
+    if args.metrics_out:
+        obs_configure(metrics_path=args.metrics_out)
+    get_recorder().install_excepthook()
+
     if args.ctrl:
-        return _run_ctrl(args)
+        try:
+            return _run_ctrl(args)
+        finally:
+            if args.trace_out:
+                get_tracer().to_chrome(args.trace_out)
+                print(f"trace -> {args.trace_out}", flush=True)
+            if args.report:
+                print(render_report(metrics=get_metrics(),
+                                    title="controller"), flush=True)
 
     cfg, ds = _resolve_config(args)
 
@@ -154,6 +183,15 @@ def main():
                   flush=True)
     finally:
         sched.stop()      # the planner thread must not outlive the loop
+        if args.trace_out:
+            get_tracer().to_chrome(args.trace_out)
+            print(f"trace -> {args.trace_out}", flush=True)
+        if args.report:
+            calib = trainer.calib.summary() \
+                if getattr(trainer, "calib", None) is not None else None
+            print(render_report(history=trainer.history,
+                                metrics=get_metrics(), calib=calib,
+                                title=f"train {args.arch}"), flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,151 @@
+"""Text dashboard: one screen answering "where did the step's time go".
+
+`render_report` folds whatever the caller has — trainer history records,
+the metrics snapshot, an `OnlineCalibrator` summary, serve request
+telemetry — into a fixed-width text report with the quantities §6.1's
+production loop watches:
+
+* makespan / step wall statistics and the waves-per-step shape;
+* per-wave straggler gap (max-min of per-rank wall times, from the
+  controller's streamed telemetry);
+* modeled-vs-measured cost gap — how far Eq. 2/Eq. 3 predictions are
+  from the measured wall, after the calibrator's global scale;
+* pipeline bubble fraction (planned and pipelined);
+* compile-cache hit rate (the NCCL-group-cache analogue);
+* serving TTFT p50/p99, end-to-end latency and queue depth.
+
+Sections with no data are omitted, so the same function serves the
+single-process trainer, the controller and the serve router.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:8.3f}s "
+    return f"{v * 1e3:8.3f}ms"
+
+
+def _pct(q, xs):
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) \
+        else 0.0
+
+
+def _line(k: str, v: str) -> str:
+    return f"  {k:<34}{v}"
+
+
+def render_report(history: Optional[List[Dict]] = None,
+                  metrics: Optional[Dict] = None,
+                  calib: Optional[Dict] = None,
+                  serve_records: Optional[Sequence[Dict]] = None,
+                  title: str = "observability report") -> str:
+    """Build the dashboard.  ``metrics`` is a `MetricsRegistry.snapshot()`
+    dict (a live registry is accepted too); ``calib`` is
+    `OnlineCalibrator.summary()`; ``serve_records`` is a list of request
+    telemetry dicts (`Request.telemetry()` / controller request_log)."""
+    if metrics is not None and hasattr(metrics, "snapshot"):
+        metrics = metrics.snapshot()
+    m = metrics or {}
+    out: List[str] = [f"== {title} =="]
+
+    if history:
+        walls = [r["wall_s"] for r in history if "wall_s" in r]
+        waves = [r["waves"] for r in history if "waves" in r]
+        out.append("-- step loop --")
+        out.append(_line("steps", str(len(history))))
+        if walls:
+            out.append(_line("step wall p50 / p99",
+                             f"{_fmt_s(_pct(50, walls))} /"
+                             f"{_fmt_s(_pct(99, walls))}"))
+            out.append(_line("makespan (sum of step walls)",
+                             _fmt_s(float(np.sum(walls)))))
+        if waves:
+            out.append(_line("waves per step (mean / max)",
+                             f"{np.mean(waves):6.1f} / {max(waves)}"))
+        bub = [r["bubble_frac"] for r in history if "bubble_frac" in r]
+        if bub:
+            out.append(_line("planned bubble fraction (mean)",
+                             f"{np.mean(bub):8.4f}"))
+        pbub = [r["bubble_frac_pipeline"] for r in history
+                if "bubble_frac_pipeline" in r]
+        if pbub:
+            out.append(_line("pipeline bubble fraction (mean)",
+                             f"{np.mean(pbub):8.4f}"))
+
+    gap_mean = m.get("ctrl.wave_gap_s.mean")
+    gap_max = m.get("ctrl.wave_gap_s.max")
+    if gap_mean is not None:
+        out.append("-- stragglers (per-wave rank gap) --")
+        out.append(_line("wave max-min gap (mean / max)",
+                         f"{_fmt_s(gap_mean)} /{_fmt_s(gap_max or 0.0)}"))
+    streamed = m.get("ctrl.waves_streamed")
+    if streamed:
+        out.append(_line("per-wave records streamed",
+                         str(int(streamed))))
+    dropped = m.get("ctrl.telemetry_dropped")
+    if dropped:
+        out.append(_line("telemetry records DROPPED", str(int(dropped))))
+
+    if calib:
+        out.append("-- cost model (Eq. 2 / Eq. 3) vs measurement --")
+        if calib.get("scale") is not None:
+            out.append(_line("measured/modeled scale (median)",
+                             f"{calib['scale']:8.4f}"))
+        if calib.get("model_gap") is not None:
+            out.append(_line("modeled-vs-measured gap (median)",
+                             f"{calib['model_gap'] * 100:7.2f}%"))
+        sp = calib.get("speed")
+        if sp:
+            out.append(_line("rank speed (min / max)",
+                             f"{min(sp):6.3f} / {max(sp):6.3f}"))
+        if calib.get("n_observed") is not None:
+            out.append(_line("observations", str(calib["n_observed"])))
+
+    miss = m.get("trainer.compile_miss", 0)
+    hit = m.get("trainer.compile_hit", 0)
+    if miss or hit:
+        out.append("-- compile cache --")
+        out.append(_line("hit rate",
+                         f"{hit / max(hit + miss, 1) * 100:7.2f}%  "
+                         f"({int(hit)} hit / {int(miss)} miss)"))
+    smiss = m.get("serve.compile_miss", 0)
+    shit = m.get("serve.compile_hit", 0)
+    if smiss or shit:
+        out.append(_line("serve prefill hit rate",
+                         f"{shit / max(shit + smiss, 1) * 100:7.2f}%  "
+                         f"({int(shit)} hit / {int(smiss)} miss)"))
+
+    if serve_records:
+        ttft = [r["t_first"] - r["t_submit"] for r in serve_records
+                if r.get("t_first") is not None
+                and r.get("t_submit") is not None]
+        e2e = [r["t_done"] - r["t_submit"] for r in serve_records
+               if r.get("t_done") is not None
+               and r.get("t_submit") is not None]
+        out.append("-- serving --")
+        out.append(_line("requests", str(len(serve_records))))
+        if ttft:
+            out.append(_line("TTFT p50 / p99",
+                             f"{_fmt_s(_pct(50, ttft))} /"
+                             f"{_fmt_s(_pct(99, ttft))}"))
+        if e2e:
+            out.append(_line("latency p50 / p99",
+                             f"{_fmt_s(_pct(50, e2e))} /"
+                             f"{_fmt_s(_pct(99, e2e))}"))
+        qd = m.get("serve.queue_depth")
+        if qd is not None:
+            out.append(_line("queue depth (last)", str(int(qd))))
+        dw = m.get("serve.decode_waves")
+        pw = m.get("serve.prefill_waves")
+        if dw is not None or pw is not None:
+            out.append(_line("prefill / decode waves",
+                             f"{int(pw or 0)} / {int(dw or 0)}"))
+
+    if len(out) == 1:
+        out.append("  (no data)")
+    return "\n".join(out)

@@ -51,6 +51,7 @@ from typing import Deque, Iterable, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.offload import CostCoeffs
+from repro.obs import get_metrics
 
 
 def fit_length_of(waves) -> Optional[int]:
@@ -150,6 +151,7 @@ class OnlineCalibrator:
         # wall-channel speed sample toward 1 (self-comparison)
         ref = self._scale_ref()
         if ref is not None and ratio > _OUTLIER * ref:
+            get_metrics().counter("calib.outliers").inc()
             return                                  # compile / GC spike
         self._ratios.append(float(ratio))
         if ref is not None:
@@ -173,6 +175,12 @@ class OnlineCalibrator:
             self._samples.append((int(fit_length), seconds
                                   / self.num_layers / self.fit_time_scale))
         self.n_observed += 1
+        mx = get_metrics()
+        mx.counter("calib.observations").inc()
+        scale = self._scale
+        if scale is not None:
+            mx.gauge("calib.scale").set(scale)
+        mx.gauge("calib.speed").set(self.rank_speed())
 
     # ------------------------------------------------------------------
     def ingest(self, costs, reports: Iterable[Tuple[Sequence[int],
@@ -256,6 +264,22 @@ class OnlineCalibrator:
                                for s, t in state.get("samples", [])),
                               maxlen=self._samples.maxlen)
         self.n_observed = int(state.get("n_observed", 0))
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        """Report-facing digest (`obs.report.render_report`'s ``calib``
+        argument): global scale, the median relative gap of recent
+        measured/modeled ratios from that scale (how well Eq. 2/Eq. 3
+        track reality once absolute error is removed), rank speeds and
+        the observation count."""
+        scale = self._scale
+        gap = None
+        if scale is not None and scale > 0 and self._ratios:
+            gap = float(np.median(np.abs(
+                np.asarray(self._ratios, float) / scale - 1.0)))
+        return {"scale": scale, "model_gap": gap,
+                "speed": [float(s) for s in self.rank_speed()],
+                "n_observed": int(self.n_observed)}
 
     # ------------------------------------------------------------------
     def rank_speed(self) -> np.ndarray:

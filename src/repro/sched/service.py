@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.hdp import StepPlan
 from repro.core.planner import PlanSpec
+from repro.obs import get_metrics, get_tracer
 from repro.sched.lookahead import plan_window, template_class
 
 
@@ -188,7 +189,9 @@ class SchedulerService:
         mutable state).  ``transient`` replans an already-consumed window
         (non-monotonic replay) against a COPY of the load accumulator so
         its costs are not double-counted into future leveling."""
-        with self._plan_lock:
+        with self._plan_lock, \
+                get_tracer().span("plan_window", t0=t0,
+                                  k=self.lookahead, transient=transient):
             with self._cv:
                 pending, self._warm_pending = self._warm_pending, []
             for comp, c_mult in pending:
@@ -202,6 +205,9 @@ class SchedulerService:
                                 load=load)
             for p, lengths in zip(plans, window):
                 p.stats["lengths"] = len(lengths)
+            mx = get_metrics()
+            mx.counter("sched.windows_planned").inc()
+            mx.gauge("sched.templates").set(len(self.templates))
             return dict(zip(range(t0, t0 + k), plans))
 
     def _plan_forward(self, step: int) -> None:
@@ -221,6 +227,7 @@ class SchedulerService:
                 self._cv.notify_all()
 
     def _worker(self) -> None:
+        get_tracer().set_thread_name("sched-planner")
         try:
             while True:
                 with self._cv:
@@ -250,13 +257,16 @@ class SchedulerService:
                                                   t0 + self.lookahead)
                         self._cv.notify_all()
                 elif mat_plan is not None and materializer is not None:
-                    if rounds_fn is not None:   # pipelined: stacked [M,...]
-                        waves = [materializer.materialize_round(
-                                     mat_step, mat_plan, rd)
-                                 for rd in rounds_fn(mat_plan)]
-                    else:
-                        waves = [materializer.materialize(mat_step, w)
-                                 for w in mat_plan.waves]
+                    with get_tracer().span("materialize_ahead",
+                                           step=mat_step):
+                        if rounds_fn is not None:  # pipelined: stacked
+                            waves = [materializer.materialize_round(
+                                         mat_step, mat_plan, rd)
+                                     for rd in rounds_fn(mat_plan)]
+                        else:
+                            waves = [materializer.materialize(mat_step, w)
+                                     for w in mat_plan.waves]
+                    get_metrics().counter("sched.steps_premat").inc()
                     with self._cv:
                         if mat_step > self._cursor:
                             # the consumer moved past this step while it
@@ -301,7 +311,8 @@ class SchedulerService:
         lengths = [int(x) for x in lengths]
         if not lengths:
             raise ValueError("plan_pool needs a non-empty request pool")
-        with self._plan_lock:
+        with self._plan_lock, \
+                get_tracer().span("plan_pool", n=len(lengths)):
             with self._cv:
                 if self._err is not None:
                     raise self._err
@@ -315,6 +326,7 @@ class SchedulerService:
             plans = plan_window([lengths], spec, templates=self.templates,
                                 load=self.load)
             plans[0].stats["lengths"] = len(lengths)
+            get_metrics().counter("sched.pool_plans").inc()
             return plans[0]
 
     # -- consumer API --------------------------------------------------
@@ -348,7 +360,8 @@ class SchedulerService:
                 # pre-resume window and pollute the persistent load
                 # accumulator with steps that never execute
                 self._thread = threading.Thread(target=self._worker,
-                                                daemon=True)
+                                                daemon=True,
+                                                name="sched-planner")
                 self._thread.start()
             self._cv.notify_all()
             if self.async_plan:

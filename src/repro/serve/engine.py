@@ -39,6 +39,7 @@ from repro.configs.base import ModelConfig
 from repro.core.planner import PlanSpec
 from repro.data.loader import WaveMaterializer
 from repro.models.transformer import logits_head
+from repro.obs import get_metrics, get_tracer
 from repro.parallel.sharding import Runtime
 from repro.serve.pool import Request, RequestPool
 from repro.train.serve_step import (_layer_cache_len, init_decode_cache,
@@ -117,8 +118,13 @@ class ServeEngine:
                 f"prompt ({prompt.size}) must fit the per-slot cache "
                 f"(max_context={self.scfg.max_context}) with room to "
                 f"generate")
-        return self.pool.submit(prompt, max_new_tokens,
-                                collect_logits=self.scfg.collect_logits)
+        rid = self.pool.submit(prompt, max_new_tokens,
+                               collect_logits=self.scfg.collect_logits)
+        get_tracer().instant("submit", rid=rid, plen=int(prompt.size))
+        mx = get_metrics()
+        mx.counter("serve.submitted").inc()
+        mx.gauge("serve.queue_depth").set(self.pool.n_waiting)
+        return rid
 
     # -- engine loop ---------------------------------------------------
     def step(self) -> List[Request]:
@@ -145,70 +151,88 @@ class ServeEngine:
         reqs = self.pool.take_waiting(len(free))
         if not reqs:
             return
-        plan = self.service.plan_pool([r.plen for r in reqs])
-        slot_of = {i: free[i] for i in range(len(reqs))}
-        provider = _PromptProvider([r.prompt for r in reqs])
-        mat = WaveMaterializer(provider, self.cfg,
-                               self.scfg.prefill_capacity)
-        for wave in plan.waves:
-            self._prefill_wave(wave, mat, reqs, slot_of)
-        for r in reqs:                   # max_new_tokens == 1 finishes at
-            if len(r.generated) >= r.max_new_tokens:     # prefill already
-                self._retire(r)
+        with get_tracer().span("admit", n=len(reqs),
+                               rids=[r.rid for r in reqs]):
+            plan = self.service.plan_pool([r.plen for r in reqs])
+            slot_of = {i: free[i] for i in range(len(reqs))}
+            provider = _PromptProvider([r.prompt for r in reqs])
+            mat = WaveMaterializer(provider, self.cfg,
+                                   self.scfg.prefill_capacity)
+            for wave in plan.waves:
+                self._prefill_wave(wave, mat, reqs, slot_of)
+            for r in reqs:               # max_new_tokens == 1 finishes at
+                if len(r.generated) >= r.max_new_tokens:  # prefill already
+                    self._retire(r)
+        get_metrics().gauge("serve.queue_depth").set(self.pool.n_waiting)
 
     def _prefill_fn(self, comp: Tuple[int, ...]):
         fn = self._prefill_jits.get(comp)
         if fn is None:
-            rt2 = self.rt.with_composition(comp)
-            fn = jax.jit(make_prefill_kv_step(self.cfg, rt2))
+            with get_tracer().span("compile", composition=comp):
+                rt2 = self.rt.with_composition(comp)
+                fn = jax.jit(make_prefill_kv_step(self.cfg, rt2))
             self._prefill_jits[comp] = fn
             self.stats["compiled_compositions"] += 1
+            get_metrics().counter("serve.compile_miss").inc()
+        else:
+            get_metrics().counter("serve.compile_hit").inc()
         return fn
 
     def _prefill_wave(self, wave, mat: WaveMaterializer,
                       reqs: List[Request], slot_of: Dict[int, int]) -> None:
         t0 = self.clock()
-        lw = mat.materialize(0, wave)
-        fn = self._prefill_fn(tuple(wave.composition))
-        hidden, head_kv, block_kv = fn(self.params, lw.batch)
-        hidden = np.asarray(hidden)
+        tr = get_tracer()
+        with tr.span("prefill", composition=tuple(wave.composition),
+                     rids=[reqs[p.seq_id].rid
+                           for s in wave.slots for p in s]):
+            with tr.span("materialize"):
+                lw = mat.materialize(0, wave)
+            fn = self._prefill_fn(tuple(wave.composition))
+            hidden, head_kv, block_kv = fn(self.params, lw.batch)
+            hidden = np.asarray(hidden)
 
-        # flat-buffer row of every (seq, abs position) — the same cursor
-        # walk `WaveMaterializer.materialize` packs with, so CP zigzag
-        # splits land on the right rows automatically
-        c = self.scfg.prefill_capacity * wave.c_mult
-        flat: Dict[int, np.ndarray] = {}
-        for r, pieces in enumerate(wave.slots):
-            cursor = r * c
-            for p in pieces:
-                fl = flat.setdefault(p.seq_id,
-                                     np.full(reqs[p.seq_id].plen, -1,
-                                             np.int64))
-                fl[p.start:p.end] = np.arange(cursor, cursor + p.length)
-                cursor += p.length
+            # flat-buffer row of every (seq, abs position) — the same
+            # cursor walk `WaveMaterializer.materialize` packs with, so
+            # CP zigzag splits land on the right rows automatically
+            c = self.scfg.prefill_capacity * wave.c_mult
+            flat: Dict[int, np.ndarray] = {}
+            for r, pieces in enumerate(wave.slots):
+                cursor = r * c
+                for p in pieces:
+                    fl = flat.setdefault(p.seq_id,
+                                         np.full(reqs[p.seq_id].plen, -1,
+                                                 np.int64))
+                    fl[p.start:p.end] = np.arange(cursor,
+                                                  cursor + p.length)
+                    cursor += p.length
 
-        covered = [reqs[sid] for sid in sorted(flat)]
-        total = sum(r.plen for r in covered)
-        for sid, fl in sorted(flat.items()):
-            req = reqs[sid]
-            slot = slot_of[sid]
-            req.slot = slot
-            self._scatter_kv(slot, req.plen, fl, head_kv, block_kv)
-            # first generated token comes straight out of the prefill
-            h_last = jnp.asarray(hidden[fl[req.plen - 1]])[None]
-            row = np.asarray(logits_head(self.params, self.cfg, h_last))[0]
-            tok = int(row.argmax())
-            req.generated.append(tok)
-            req.t_first = self.clock()
-            if req.logits is not None:
-                req.logits.append(row.copy())
-            self._req[slot] = req
-            self._pos[slot] = req.plen
-            self._tok[slot] = tok
-        dt = self.clock() - t0
-        for req in covered:              # attribute by token share
-            req.prefill_s += dt * req.plen / max(total, 1)
+            mx = get_metrics()
+            covered = [reqs[sid] for sid in sorted(flat)]
+            total = sum(r.plen for r in covered)
+            for sid, fl in sorted(flat.items()):
+                req = reqs[sid]
+                slot = slot_of[sid]
+                req.slot = slot
+                self._scatter_kv(slot, req.plen, fl, head_kv, block_kv)
+                # first generated token comes straight out of the prefill
+                h_last = jnp.asarray(hidden[fl[req.plen - 1]])[None]
+                row = np.asarray(logits_head(self.params, self.cfg,
+                                             h_last))[0]
+                tok = int(row.argmax())
+                req.generated.append(tok)
+                req.t_first = self.clock()
+                mx.histogram("serve.ttft_s").observe(
+                    req.t_first - req.t_submit)
+                if req.logits is not None:
+                    req.logits.append(row.copy())
+                self._req[slot] = req
+                self._pos[slot] = req.plen
+                self._tok[slot] = tok
+            dt = self.clock() - t0
+            for req in covered:          # attribute by token share
+                req.prefill_s += dt * req.plen / max(total, 1)
         self.stats["prefill_waves"] += 1
+        mx.counter("serve.prefill_waves").inc()
 
     def _scatter_kv(self, slot: int, plen: int, fl: np.ndarray,
                     head_kv, block_kv) -> None:
@@ -241,12 +265,15 @@ class ServeEngine:
         if not active:
             return []
         t0 = self.clock()
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._tok),
-            jnp.asarray(self._pos))
-        lognp = np.asarray(logits)
+        with get_tracer().span("decode", n_live=len(active),
+                               rids=[self._req[i].rid for i in active]):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos))
+            lognp = np.asarray(logits)
         dt = self.clock() - t0
         self.stats["decode_waves"] += 1
+        get_metrics().counter("serve.decode_waves").inc()
         finished: List[Request] = []
         for i in active:
             req = self._req[i]
@@ -267,6 +294,12 @@ class ServeEngine:
         if req.slot is not None:
             self._req[req.slot] = None
         self.pool.finish(req)
+        get_tracer().instant("finish", rid=req.rid,
+                             n_tokens=len(req.generated))
+        mx = get_metrics()
+        mx.counter("serve.finished").inc()
+        if req.t_done is not None:
+            mx.histogram("serve.e2e_s").observe(req.t_done - req.t_submit)
         self.records.append(req.telemetry())
 
     # -- introspection -------------------------------------------------

@@ -33,6 +33,7 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
+from repro.obs import get_metrics, get_recorder, get_tracer, monotime
 from repro.sched.calibrate import OnlineCalibrator, fit_length_of
 from repro.models.transformer import init_params
 from repro.optim import adamw
@@ -125,7 +126,10 @@ class Trainer:
         self.extra_data_state = None  # ctrl-worker hook: controller-owned
                                       # scheduler/calibrator state merged
                                       # into checkpoint data_state
-        self._clock = time.perf_counter
+        # ONE monotonic clock for every telemetry/span measurement in the
+        # step loop (obs.monotime = time.perf_counter); wall clock only
+        # appears as the human-readable ``t_wall`` record field
+        self._clock = monotime
         self._attach_materializer(scheduler)
 
     # ------------------------------------------------------------------
@@ -167,6 +171,8 @@ class Trainer:
         (the dispatch will pay a compile; the calibrator skips it)."""
         key = (composition, c_mult, round(offload_ratio, 2))
         fresh = key not in self._exec_cache
+        get_metrics().counter("trainer.compile_miss" if fresh
+                              else "trainer.compile_hit").inc()
         if fresh:
             rt_wave = self._wave_rt(composition, offload_ratio)
             self._exec_cache[key] = jax.jit(
@@ -179,6 +185,8 @@ class Trainer:
         stream length as part of the key."""
         key = ("pp", composition, c_mult, round(offload_ratio, 2), n_waves)
         fresh = key not in self._exec_cache
+        get_metrics().counter("trainer.compile_miss" if fresh
+                              else "trainer.compile_hit").inc()
         if fresh:
             rt_round = self._wave_rt(composition, offload_ratio)
             self._exec_cache[key] = jax.jit(
@@ -266,16 +274,37 @@ class Trainer:
         else:
             self.calib.observe(costs, seconds=float(measured), **kw)
 
+    def _dispatch(self, tr, fn, grads, batch, name: str, idx: int,
+                  composition, fresh: bool):
+        """Run one jitted executable under a span; a fresh cache entry
+        pays its compile inside the nested "compile" span."""
+        with tr.span(name, step=self.step, idx=idx,
+                     composition=composition, fresh=fresh):
+            t_w = self._clock()
+            if fresh:
+                with tr.span("compile", step=self.step,
+                             composition=composition):
+                    grads, metrics = fn(self.params, grads, batch)
+                    loss = float(metrics["loss"])    # blocks: compiled
+            else:                                    # AND executed
+                grads, metrics = fn(self.params, grads, batch)
+                loss = float(metrics["loss"])        # blocks: completed
+            dt = self._clock() - t_w
+        return grads, loss, dt
+
     def train_step(self) -> Dict:
-        if self.tcfg.sched_async and hasattr(self.sched, "get_step"):
-            plan, pre_waves = self.sched.get_step(self.step)
-        else:
-            plan, pre_waves = self.sched.plan_step(self.step), None
+        tr = get_tracer()
+        mx = get_metrics()
+        t0 = self._clock()
+        with tr.span("plan", step=self.step):
+            if self.tcfg.sched_async and hasattr(self.sched, "get_step"):
+                plan, pre_waves = self.sched.get_step(self.step)
+            else:
+                plan, pre_waves = self.sched.plan_step(self.step), None
         denom = float(plan.denom)
         grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                              self.params)
         losses = []
-        t0 = time.time()
         rec_extra = {}
         if self.pipelined:
             # pipelined executor: the wave queue runs as rounds of like
@@ -289,21 +318,28 @@ class Trainer:
             # the producer thread and re-raises any captured error
             round_iter = iter(pre_waves) if pre_waves is not None \
                 else self.loader.iter_rounds(self.step, plan, rounds)
-            for i, stacked in enumerate(round_iter):
+            for i in range(len(rounds)):
+                # the materialize span measures the wait for the round's
+                # buffers (near-zero when materialize-ahead got there)
+                with tr.span("materialize", step=self.step, idx=i):
+                    stacked = next(round_iter)
                 rd = rounds[i]
                 batch = {k: jnp.asarray(v) for k, v in stacked.items()}
                 batch["denom"] = jnp.float32(denom)
                 fn, fresh = self._round_fn(rd.composition, rd.c_mult,
                                            rd.offload_ratio,
                                            len(rd.wave_ids))
-                t_w = self._clock()
-                grads, metrics = fn(self.params, grads, batch)
-                losses.append(float(metrics["loss"]))    # blocks: the
-                dt = self._clock() - t_w                 # round completed
+                grads, loss, dt = self._dispatch(
+                    tr, fn, grads, batch, "round", i, rd.composition,
+                    fresh)
+                losses.append(loss)
+                mx.histogram("trainer.dispatch_s").observe(dt)
                 rd_waves = [plan.waves[i] for i in rd.wave_ids]
                 if self.wave_time_fn is not None:
                     dt, fresh = self.wave_time_fn(rd_waves), False
                 self._observe(rd_waves, dt, fresh)
+            for _ in round_iter:        # drain the prefetch epilogue so
+                pass                    # producer errors still surface
             sched_stats = pipeline_schedule_stats(
                 plan, self.rt.num_stages, self.tcfg.max_round_waves)
             rec_extra = {"rounds": len(rounds),
@@ -312,22 +348,28 @@ class Trainer:
         else:
             wave_iter = iter(pre_waves) if pre_waves is not None \
                 else self.loader.iter_step(self.step, plan)
-            for i, lw in enumerate(wave_iter):      # drains the prefetch
-                wave = plan.waves[i]                # iterator fully (see
-                                                    # the rounds loop)
+            for i in range(len(plan.waves)):
+                with tr.span("materialize", step=self.step, idx=i):
+                    lw = next(wave_iter)
+                wave = plan.waves[i]
                 batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
                 batch["denom"] = jnp.float32(denom)
                 fn, fresh = self._wave_fn(lw.composition, lw.c_mult,
                                           lw.offload_ratio)
-                t_w = self._clock()
-                grads, metrics = fn(self.params, grads, batch)
-                losses.append(float(metrics["loss"]))    # blocks: the
-                dt = self._clock() - t_w                 # wave completed
+                grads, loss, dt = self._dispatch(
+                    tr, fn, grads, batch, "wave", i, lw.composition,
+                    fresh)
+                losses.append(loss)
+                mx.histogram("trainer.dispatch_s").observe(dt)
                 if self.wave_time_fn is not None:
                     dt, fresh = self.wave_time_fn(wave), False
                 self._observe([wave], dt, fresh)
-        self.params, self.opt_state, om = jax.jit(self.apply_step)(
-            self.params, self.opt_state, grads)
+            for _ in wave_iter:         # drain the prefetch epilogue so
+                pass                    # producer errors still surface
+        with tr.span("apply", step=self.step):
+            self.params, self.opt_state, om = jax.jit(self.apply_step)(
+                self.params, self.opt_state, grads)
+            om = {k: float(v) for k, v in om.items()}   # blocks: applied
         # straggler feedback: *measured* per-rank speeds (the old loop
         # EMA'd the plan's own modeled costs — on a balanced plan every
         # rank looked identical and a real straggler was invisible)
@@ -348,12 +390,24 @@ class Trainer:
                "waves": len(plan.waves),
                "bubble_frac": plan.stats["bubble_frac"],
                "grad_norm": float(om["grad_norm"]),
-               "wall_s": time.time() - t0, **rec_extra}
+               # wall_s on the monotonic clock (same timeline as every
+               # span); t_wall is the one human-readable wall stamp
+               "wall_s": self._clock() - t0,
+               "t_wall": time.time(), **rec_extra}
         self.history.append(rec)
+        mx.counter("trainer.steps").inc()
+        mx.counter("trainer.waves").inc(len(plan.waves))
+        mx.gauge("trainer.loss").set(rec["loss"])
+        mx.gauge("trainer.step_wall_s").set(rec["wall_s"])
+        get_recorder().record("train_step", step=self.step,
+                              loss=rec["loss"], waves=rec["waves"],
+                              wall_s=rec["wall_s"])
+        mx.export_step(self.step)
         if self.ckpt and self.tcfg.ckpt_save \
                 and self.step % self.tcfg.ckpt_every == 0:
-            self.ckpt.save(self.step, self.params, self.opt_state,
-                           self.data_state())
+            with tr.span("checkpoint", step=self.step):
+                self.ckpt.save(self.step, self.params, self.opt_state,
+                               self.data_state())
         return rec
 
     def run(self, steps: Optional[int] = None):

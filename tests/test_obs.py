@@ -1,0 +1,358 @@
+"""Observability layer: Chrome-trace schema + nesting, the zero-overhead
+disabled path, metrics thread-safety (including the scheduler's async
+planner thread), flight-recorder dumps on worker death, telemetry
+timestamping and the controller's drop accounting."""
+import glob
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.planner import PlanSpec
+from repro.data.distribution import LengthDistribution
+from repro.data.loader import SyntheticDataset
+from repro.obs import (MetricsRegistry, Tracer, get_metrics, get_recorder,
+                       get_tracer, monotime, render_report,
+                       validate_chrome_trace)
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import _NULL_SPAN
+from repro.sched.service import SchedulerService
+
+DIST = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+CFG = get_config("llama3.2-3b").reduced()
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Obs state is process-global; keep each test hermetic."""
+    was_enabled = get_tracer().enabled
+    get_metrics().reset()
+    get_tracer().clear()
+    get_recorder().clear()
+    yield
+    get_metrics().reset()
+    get_metrics().configure_sink(None)
+    get_tracer().clear()
+    get_tracer().enabled = was_enabled
+    get_recorder().clear()
+
+
+def _mk_service(async_plan=False, hdp=4):
+    ds = SyntheticDataset(DIST, CFG.vocab_size, tokens_per_step=4096,
+                          context=2048)
+    spec = PlanSpec.for_config(CFG, capacity=512, hdp=hdp,
+                               use_offload=False)
+    return SchedulerService(ds, spec, lookahead=2, async_plan=async_plan)
+
+
+# -- tracing ------------------------------------------------------------
+def test_trace_schema_and_nesting(tmp_path):
+    t = Tracer(enabled=True, process="test", pid=7)
+    t.set_thread_name("main-thread")
+    with t.span("outer", step=0):
+        with t.span("inner", idx=1):
+            pass
+        t.instant("marker", note="hello")
+    with t.span("second"):
+        pass
+
+    def other():
+        with t.span("other-thread-span"):
+            pass
+    th = threading.Thread(target=other)
+    th.start()
+    th.join()
+
+    path = tmp_path / "trace.json"
+    doc = t.to_chrome(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk["traceEvents"] == doc["traceEvents"]
+    ok, problems = validate_chrome_trace(
+        doc, require_names=("outer", "inner", "marker",
+                            "other-thread-span"))
+    assert ok, problems
+    evs = doc["traceEvents"]
+    # every non-meta event carries the Chrome-required keys
+    for e in evs:
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            assert k in e, e
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert xs["outer"]["pid"] == 7
+    assert xs["outer"]["args"]["step"] == 0
+    # inner nests strictly inside outer on the same lane
+    assert xs["inner"]["ts"] >= xs["outer"]["ts"]
+    assert (xs["inner"]["ts"] + xs["inner"]["dur"]
+            <= xs["outer"]["ts"] + xs["outer"]["dur"] + 1e-6)
+    # metadata rows name the process lane; wall anchor present
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert any(m["name"] == "process_name" for m in metas)
+    assert any(m["name"] == "thread_name"
+               and m["args"]["name"] == "main-thread" for m in metas)
+    assert "wall_anchor" in doc["otherData"]
+
+
+def test_validator_rejects_partial_overlap():
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "pid": 0,
+         "tid": 0},
+        {"name": "b", "ph": "X", "ts": 5.0, "dur": 10.0, "pid": 0,
+         "tid": 0}]}
+    ok, problems = validate_chrome_trace(bad)
+    assert not ok
+    assert any("overlaps" in p for p in problems)
+    ok, problems = validate_chrome_trace(
+        {"traceEvents": [{"ph": "X", "ts": 0, "pid": 0, "tid": 0}]})
+    assert not ok                      # missing name, missing dur
+
+
+def test_disabled_tracing_allocates_nothing():
+    t = Tracer(enabled=False)
+    s1 = t.span("hot-path", step=1)
+    s2 = t.span("other")
+    assert s1 is s2 is _NULL_SPAN      # one shared no-op object
+    with s1:
+        s1.set("k", "v")               # all no-ops
+    t.instant("marker")
+    assert t.snapshot() == []          # nothing recorded
+    t.enabled = True
+    assert t.span("now-real") is not _NULL_SPAN
+
+
+# -- metrics ------------------------------------------------------------
+def test_metrics_concurrent_updates_exact():
+    reg = MetricsRegistry()
+    N, T = 1000, 8
+
+    def work(i):
+        for _ in range(N):
+            reg.counter("shared").inc()
+            reg.histogram("lat").observe(1e-3 * (i + 1))
+        reg.gauge("speed").set([1.0, 2.0, float(i)])
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(T)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    snap = reg.snapshot()
+    assert snap["shared"] == N * T     # no lost increments
+    assert snap["lat.count"] == N * T
+    assert len(snap["speed"]) == 3
+
+
+def test_metrics_jsonl_export(tmp_path):
+    reg = MetricsRegistry()
+    sink = tmp_path / "metrics.jsonl"
+    reg.configure_sink(str(sink))
+    reg.counter("steps").inc()
+    reg.export_step(0)
+    reg.counter("steps").inc()
+    reg.export_step(1)
+    lines = [json.loads(ln) for ln in sink.read_text().splitlines()]
+    assert [ln["step"] for ln in lines] == [0, 1]
+    assert lines[1]["steps"] == 2
+    for ln in lines:                   # clock-unification contract
+        assert "t_mono" in ln and "t_wall" in ln
+
+
+def test_histogram_quantile_bounds():
+    reg = MetricsRegistry()
+    h = reg.histogram("d")
+    for v in np.linspace(1e-3, 0.5, 200):
+        h.observe(float(v))
+    assert 1e-3 <= h.quantile(0.5) <= 0.5 * 4
+    assert h.summary()["count"] == 200
+
+
+def test_async_planner_thread_writes_metrics():
+    """The planner daemon thread and the consumer thread hit the global
+    registry concurrently; counts stay exact and reads never throw."""
+    svc = _mk_service(async_plan=True)
+    try:
+        stop = threading.Event()
+        errs = []
+
+        def poll():
+            while not stop.is_set():
+                try:
+                    get_metrics().snapshot()
+                except Exception as e:      # pragma: no cover
+                    errs.append(e)
+        th = threading.Thread(target=poll)
+        th.start()
+        for t in range(6):
+            svc.plan_step(t)
+        stop.set()
+        th.join()
+        assert not errs
+        snap = get_metrics().snapshot()
+        assert snap.get("sched.windows_planned", 0) >= 3
+    finally:
+        svc.stop()
+
+
+# -- flight recorder ----------------------------------------------------
+def test_recorder_dump_contents(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_DIR", str(tmp_path))
+    rec = FlightRecorder(capacity=4, process="unit")
+    for i in range(6):                 # ring keeps only the last 4
+        rec.record("tick", i=i)
+    get_metrics().counter("x").inc(3)
+    path = rec.dump("unit_test")
+    assert path and os.path.exists(path)
+    doc = json.loads(open(path).read())
+    assert doc["reason"] == "unit_test"
+    assert [e["i"] for e in doc["events"]] == [2, 3, 4, 5]
+    for e in doc["events"]:
+        assert "t_mono" in e and "t_wall" in e
+    assert doc["metrics"]["x"] == 3
+    # dump never raises, even into an unwritable location
+    assert rec.dump("bad", path="/nonexistent-dir/nope/x.json") == ""
+
+
+def _stub_worker(address):
+    """Protocol-complete worker (no compute): step_done per plan, ready
+    after reconfig — enough to drive the controller's elastic path."""
+    from repro.ctrl.rpc import connect
+    chan = connect(address)
+    chan.send({"type": "hello"})
+    cfg = chan.recv()
+    assert cfg["type"] == "config"
+    ranks = cfg["ranks"]
+    chan.send({"type": "ready", "step": cfg.get("resume_step", 0)})
+    try:
+        while True:
+            msg = chan.recv()
+            if msg["type"] == "plan":
+                tel = [{"ranks": ranks, "times": [1e-3] * len(ranks),
+                        "exact": True, "fresh": False,
+                        "t_mono": monotime(), "t_wall": time.time(),
+                        "step": msg["step"]}
+                       for _ in msg["plan"].waves]
+                chan.send({"type": "step_done", "step": msg["step"],
+                           "loss": 0.0, "grad_norm": 0.0, "keys": [],
+                           "telemetry": tel})
+            elif msg["type"] == "reconfig":
+                ranks = msg["ranks"]
+                chan.send({"type": "ready", "step": msg["resume_step"]})
+            elif msg["type"] == "shutdown":
+                chan.send({"type": "bye"})
+                return
+    except (EOFError, OSError):
+        pass
+    finally:
+        chan.close()
+
+
+def _mk_controller(num_workers=2, steps=4, **kw):
+    from repro.ctrl.controller import Controller, ControllerConfig
+    ds = SyntheticDataset(DIST, CFG.vocab_size, tokens_per_step=2048,
+                          context=1024)
+    spec = PlanSpec.for_config(CFG, capacity=256, hdp=4,
+                               use_offload=False)
+    return Controller(ds, CFG, spec, ControllerConfig(
+        num_workers=num_workers, steps=steps, lookahead=1,
+        heartbeat_interval=0.05, **kw))
+
+
+def test_flight_recorder_dump_on_worker_kill(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_DIR", str(tmp_path))
+    ctl = _mk_controller(num_workers=2, steps=4)
+    addr = ctl.serve()
+    threads = [threading.Thread(target=_stub_worker, args=(addr,),
+                                daemon=True) for _ in range(2)]
+    for t in threads:
+        t.start()
+    ctl.wait_for_workers()
+    killed = []
+
+    def on_step(c, rec):
+        if not killed:                  # kill worker 0 after step one
+            killed.append(True)
+            c.handles[0].chan.close()
+
+    hist = ctl.run(on_step=on_step)
+    assert hist[-1]["step"] == 4
+    assert hist[-1]["workers"] == 1     # finished on the survivor
+    dumps = glob.glob(str(tmp_path / "flightrec_membership_change_*.json"))
+    assert dumps, "worker death must write a flight record"
+    doc = json.loads(open(dumps[0]).read())
+    assert doc["reason"] == "membership_change"
+    kinds = {e["kind"] for e in doc["events"]}
+    assert "dispatch" in kinds          # the ring saw the lead-up
+    assert "membership_change" in kinds
+    snap = get_metrics().snapshot()
+    assert snap.get("ctrl.recoveries") == 1
+    assert snap.get("ctrl.waves_streamed", 0) == 0  # stubs don't stream
+    for t in threads:
+        t.join(timeout=10.0)
+
+
+# -- telemetry records --------------------------------------------------
+def test_make_telemetry_record_timestamps():
+    from repro.ctrl.worker import make_telemetry_record
+    lo = monotime()
+    rec = make_telemetry_record([2, 3], 0.25, False, step=7)
+    hi = monotime()
+    assert rec["ranks"] == [2, 3]
+    assert rec["times"] == [0.25, 0.25]    # wall attributed to all owned
+    assert rec["exact"] is False
+    assert rec["step"] == 7
+    assert lo <= rec["t_mono"] <= hi       # same monotonic timeline
+    assert abs(rec["t_wall"] - time.time()) < 60.0
+    # vector measurement: per-rank clock, sliced to the owned ranks
+    vec = make_telemetry_record([1, 2], np.asarray([9.0, 0.1, 0.2, 9.0]),
+                                True)
+    assert vec["exact"] is True
+    assert vec["times"] == [0.1, 0.2]
+    assert vec["fresh"] is True
+    assert "step" not in vec
+
+
+def test_ingest_counts_dropped_telemetry(caplog):
+    ctl = _mk_controller(num_workers=2, steps=1)
+    try:
+        plan, _ = ctl.service.get_step(0)
+        n = len(plan.waves)
+        rec = {"ranks": [0, 1], "times": [1e-3, 2e-3], "exact": True,
+               "fresh": False}
+        rec2 = {"ranks": [2, 3], "times": [1e-3, 5e-3], "exact": True,
+                "fresh": False}
+        dones = {"a": {"keys": [], "telemetry": [dict(rec)] * n},
+                 "b": {"keys": [], "telemetry": [dict(rec2)] * (n + 2)}}
+        with caplog.at_level("WARNING", logger="repro.ctrl"):
+            ctl._ingest_telemetry(0, plan, dones)
+        snap = get_metrics().snapshot()
+        assert snap.get("ctrl.telemetry_dropped") == 2
+        assert any("dropping 2" in r.message for r in caplog.records)
+        # straggler gap histogram saw every aligned dispatch
+        assert snap.get("ctrl.wave_gap_s.count") == n
+        assert snap["ctrl.wave_gap_s.max"] == pytest.approx(4e-3)
+        # aligned telemetry counts nothing
+        get_metrics().reset()
+        dones["b"]["telemetry"] = dones["b"]["telemetry"][:n]
+        ctl._ingest_telemetry(1, plan, dones)
+        assert "ctrl.telemetry_dropped" not in get_metrics().snapshot()
+    finally:
+        ctl.stop()
+
+
+# -- report -------------------------------------------------------------
+def test_report_renders_sections():
+    get_metrics().counter("trainer.compile_hit").inc(9)
+    get_metrics().counter("trainer.compile_miss").inc()
+    txt = render_report(
+        history=[{"wall_s": 0.5, "waves": 3, "bubble_frac": 0.1},
+                 {"wall_s": 0.6, "waves": 4, "bubble_frac": 0.2}],
+        metrics=get_metrics(),
+        calib={"scale": 2.0, "model_gap": 0.05, "speed": [0.9, 1.1],
+               "n_observed": 12},
+        serve_records=[{"t_submit": 0.0, "t_first": 0.2, "t_done": 1.0}])
+    for needle in ("step loop", "cost model", "compile cache",
+                   "serving", "TTFT", "90.00%"):
+        assert needle in txt, txt
+    assert render_report() == "== observability report ==\n  (no data)"
