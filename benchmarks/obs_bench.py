@@ -1,6 +1,7 @@
-"""Observability overhead + trace-validity benchmark → ``BENCH_obs.json``.
+"""Observability overhead + trace-validity + cluster-analytics benchmark
+→ ``BENCH_obs.json``.
 
-Two measurements:
+Three measurements:
 
 * **Tracing overhead.**  Cost of the span layer on the hot path, as a
   fraction of an untraced CPU training step: events-per-step measured
@@ -19,11 +20,27 @@ Two measurements:
   strict nesting per (pid, tid) lane, one "wave" span per dispatched
   wave, and at least one request's prefill→decode lifecycle.
 
-Run: ``python -m benchmarks.obs_bench [--skip-validate] [--out PATH]``
+* **Cluster analytics (obs/analyze + obs/anomaly).**  Two real
+  control-plane runs (controller + 2 worker subprocesses, hdp=4), each
+  exporting per-process traces into ``obs_out/``:
+
+  - a CLEAN run — the merged cross-process trace must validate, every
+    (step x lane) time attribution must close within 5% of its step
+    wall, MFU/goodput must price, and the online anomaly detector must
+    emit ZERO advisories (false-positive gate);
+  - an injected ``slow_ranks={1: 3.0}`` straggler run — a straggler
+    advisory for rank 1 must fire from the MID-step telemetry stream
+    within a bounded number of fleet waves, and its recorded
+    ``rank_speed_after`` must show `SchedulerService` already
+    de-weighted the slow rank when it fired.
+
+Run: ``python -m benchmarks.obs_bench [--skip-validate]
+[--skip-cluster] [--out PATH]``
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import subprocess
@@ -32,7 +49,12 @@ import time
 
 SNAPSHOT_PATH = "BENCH_obs.json"
 OVERHEAD_GATE = 0.02
+ATTR_GATE = 0.05                   # |compute+dispatch+bubble+stall - 1|
+DETECT_WAVES_GATE = 12             # straggler advisory within this many
+                                   # finalized fleet waves
+OBS_DIR = os.environ.get("REPRO_OBS_DIR", "obs_out")
 _CHILD_FLAG = "--validate-child"
+_CLUSTER_FLAG = "--cluster-child"
 
 
 def _mk_trainer(sched_async: bool = False):
@@ -202,7 +224,10 @@ def _validate_child(trace_out: str) -> None:
                       "serve_finished": len(finished)}))
 
 
-def trace_validation(trace_out: str = "trace_obs_bench.json") -> dict:
+def trace_validation(trace_out: str = None) -> dict:
+    if trace_out is None:
+        trace_out = os.path.join(OBS_DIR, "trace_obs_bench.json")
+    os.makedirs(os.path.dirname(trace_out) or ".", exist_ok=True)
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8")
@@ -216,12 +241,159 @@ def trace_validation(trace_out: str = "trace_obs_bench.json") -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+# -- cluster analytics: merged traces + attribution + anomaly gates -----
+def _cluster_child(trace_dir: str, slow: bool) -> None:
+    """Runs in its own process: a 2-worker hdp=4 control-plane run with
+    tracing on in every process (workers export on exit via
+    $REPRO_TRACE_DIR), optionally with the 3x fault-injection clock on
+    rank 1.  Prints one JSON line: advisories, detector summary, final
+    rank speeds."""
+    os.makedirs(trace_dir, exist_ok=True)
+    os.environ["REPRO_TRACE"] = "1"          # workers inherit
+    os.environ["REPRO_TRACE_DIR"] = trace_dir
+    from repro.configs.registry import get_config
+    from repro.core.planner import PlanSpec
+    from repro.ctrl.controller import Controller, ControllerConfig
+    from repro.data.distribution import LengthDistribution
+    from repro.data.loader import SyntheticDataset
+    from repro.launch.cluster import LocalCluster
+    from repro.obs import configure as obs_configure, get_tracer
+
+    obs_configure(trace=True, trace_process="controller")
+    cfg = get_config("llama3.2-3b").reduced()
+    dist = LengthDistribution("tiny", 4.5, 0.8, 0.1, 1.5, 256)
+    ds = SyntheticDataset(dist, cfg.vocab_size, tokens_per_step=2048,
+                          context=1024)
+    spec = PlanSpec.for_config(cfg, capacity=256, hdp=4,
+                               use_offload=False)
+    ctl = Controller(ds, cfg, spec, ControllerConfig(
+        num_workers=2, steps=4, calibrate=True,
+        heartbeat_interval=0.05,     # stream per-wave telemetry mid-step
+        slow_ranks={1: 3.0} if slow else None,
+        runtime_kw={"remat": "none", "kv_chunk": 64},
+        opt_kw={"lr": 1e-3}))
+    cluster = LocalCluster(ctl)
+    cluster.start()
+    try:
+        cluster.run()
+    finally:
+        cluster.shutdown()
+    get_tracer().to_chrome(os.path.join(
+        trace_dir, f"trace_controller_{os.getpid()}.json"))
+    print(json.dumps({
+        "advisories": ctl.advisories,
+        "anomaly": ctl.anomaly.summary() if ctl.anomaly else None,
+        "telemetry": {str(k): v
+                      for k, v in ctl.telemetry_summary().items()},
+        "rank_speed": [round(float(s), 4)
+                       for s in ctl.calib.rank_speed()]}))
+
+
+def _run_cluster_child(trace_dir: str, slow: bool) -> dict:
+    env = dict(os.environ)
+    env.pop("REPRO_TRACE", None)       # child enables programmatically
+    env.pop("REPRO_TRACE_DIR", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, "-m", "benchmarks.obs_bench", _CLUSTER_FLAG,
+           "--trace-dir", trace_dir] + (["--slow"] if slow else [])
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=1800, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-1200:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _merge_dir(trace_dir: str):
+    """Merge + validate + attribute + price every per-process trace a
+    cluster child left in ``trace_dir``."""
+    from repro.obs import validate_chrome_trace
+    from repro.obs.analyze import (attribute_steps, merge_traces,
+                                   mfu_goodput)
+    paths = sorted(p for p in
+                   glob.glob(os.path.join(trace_dir, "trace_*.json"))
+                   if "merged" not in os.path.basename(p))
+    merged = merge_traces(paths)
+    with open(os.path.join(trace_dir, "trace_merged.json"), "w") as f:
+        json.dump(merged, f)
+        f.write("\n")
+    ok, problems = validate_chrome_trace(merged)
+    attribution = attribute_steps(merged)
+    return (paths, merged, ok, problems, attribution,
+            mfu_goodput(merged, attribution))
+
+
+def cluster_analysis(base_dir: str = None) -> dict:
+    base_dir = base_dir or OBS_DIR
+    out = {}
+
+    # -- clean run: trace pipeline + zero-false-positive gate ----------
+    clean_dir = os.path.join(base_dir, "cluster_clean")
+    clean = _run_cluster_child(clean_dir, slow=False)
+    paths, _merged, ok, problems, attribution, mfu = _merge_dir(clean_dir)
+    worst = max((abs(r["check"] - 1.0) for r in attribution),
+                default=None)
+    lanes = len({(r["pid"], r["tid"]) for r in attribution})
+    n_fp = len(clean["advisories"])
+    clean_ok = bool(ok and n_fp == 0 and worst is not None
+                    and worst <= ATTR_GATE and lanes >= 3
+                    and (mfu.get("mfu") or 0) > 0
+                    and (mfu.get("goodput") or 0) > 0)
+    out["clean"] = {
+        "n_processes": len(paths), "trace_valid": ok,
+        "problems": problems[:4], "lanes": lanes,
+        "attr_worst": round(worst, 5) if worst is not None else None,
+        "attr_gate": ATTR_GATE, "false_positives": n_fp,
+        "mfu": mfu.get("mfu"), "goodput": mfu.get("goodput"),
+        "tokens_per_s": mfu.get("tokens_per_s"),
+        "waves_priced": mfu.get("n_waves"),
+        "anomaly": clean["anomaly"], "gate_ok": clean_ok}
+
+    # -- injected straggler: bounded-wave mid-step detection gate ------
+    slow_dir = os.path.join(base_dir, "cluster_straggler")
+    slow = _run_cluster_child(slow_dir, slow=True)
+    strag = [a for a in slow["advisories"]
+             if a["kind"] == "straggler" and a.get("rank") == 1]
+    applied = [a for a in strag if a.get("applied")
+               and a.get("rank_speed_after")]
+    detect_waves = min((a["waves_seen"] for a in strag), default=None)
+    shifted = False
+    if applied:
+        sp = applied[0]["rank_speed_after"]
+        shifted = sp[1] < min(s for i, s in enumerate(sp) if i != 1)
+    slow_ok = bool(strag and applied and shifted
+                   and detect_waves is not None
+                   and detect_waves <= DETECT_WAVES_GATE)
+    out["straggler"] = {
+        "advisories": len(slow["advisories"]),
+        "straggler_advisories": len(strag),
+        "detect_waves": detect_waves,
+        "detect_gate": DETECT_WAVES_GATE,
+        "applied_mid_step": bool(applied), "speed_shifted": shifted,
+        "rank_speed_after": applied[0]["rank_speed_after"]
+        if applied else None,
+        "final_rank_speed": slow["rank_speed"],
+        "anomaly": slow["anomaly"], "gate_ok": slow_ok}
+    out["gate_ok"] = bool(clean_ok and slow_ok)
+
+    # human-readable artifact for CI upload: the full dashboard over the
+    # clean run's merged trace plus the straggler run's advisories
+    from repro.obs.report import render_report
+    with open(os.path.join(base_dir, "cluster_report.txt"), "w") as f:
+        f.write(render_report(attribution=attribution, mfu=mfu,
+                              advisories=slow["advisories"],
+                              title="obs_bench cluster analysis"))
+        f.write("\n")
+    return out
+
+
 # -- snapshot / harness wiring ------------------------------------------
 def snapshot(path: str = SNAPSHOT_PATH, skip_validate: bool = False,
-             steps: int = 5) -> dict:
+             skip_cluster: bool = False, steps: int = 5) -> dict:
     snap = {"overhead": tracing_overhead(steps=steps)}
     if not skip_validate:
         snap["trace_8dev"] = trace_validation()
+    if not skip_cluster:
+        snap["cluster"] = cluster_analysis()
     with open(path, "w") as f:
         json.dump(snap, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -236,6 +408,17 @@ def rows_from(snap: dict) -> list:
     if tv:
         rows.append(("obs.trace_8dev_valid", 0.0,
                      f"ok={tv['ok']} events={tv['n_events']}"))
+    cl = snap.get("cluster")
+    if cl:
+        rows.append(("obs.cluster_clean", 0.0,
+                     f"fp={cl['clean']['false_positives']} "
+                     f"attr_worst={cl['clean']['attr_worst']} "
+                     f"mfu={cl['clean']['mfu']} "
+                     f"goodput={cl['clean']['goodput']}"))
+        rows.append(("obs.cluster_straggler",
+                     float(cl["straggler"]["detect_waves"] or -1),
+                     f"applied={cl['straggler']['applied_mid_step']} "
+                     f"shifted={cl['straggler']['speed_shifted']}"))
     return rows
 
 
@@ -248,16 +431,28 @@ def main() -> None:
     ap.add_argument("--out", default=SNAPSHOT_PATH)
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--skip-validate", action="store_true",
-                    help="overhead only (no 8-device subprocess)")
+                    help="no 8-device trace-validity subprocess")
+    ap.add_argument("--skip-cluster", action="store_true",
+                    help="no cluster-analytics control-plane runs")
     ap.add_argument(_CHILD_FLAG, action="store_true",
                     help=argparse.SUPPRESS)
-    ap.add_argument("--trace-out", default="trace_obs_bench.json")
+    ap.add_argument(_CLUSTER_FLAG, action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--slow", action="store_true",
+                    help=argparse.SUPPRESS)   # cluster child: straggler
+    ap.add_argument("--trace-out", default=None)
+    ap.add_argument("--trace-dir", default=None)
     args = ap.parse_args()
     if args.validate_child:
-        _validate_child(args.trace_out)
+        _validate_child(args.trace_out
+                        or os.path.join(OBS_DIR, "trace_obs_bench.json"))
+        return
+    if args.cluster_child:
+        _cluster_child(args.trace_dir
+                       or os.path.join(OBS_DIR, "cluster"), args.slow)
         return
     snap = snapshot(args.out, skip_validate=args.skip_validate,
-                    steps=args.steps)
+                    skip_cluster=args.skip_cluster, steps=args.steps)
     print(json.dumps(snap, indent=1, sort_keys=True))
     if not snap["overhead"]["gate_ok"]:
         raise SystemExit(
@@ -266,6 +461,12 @@ def main() -> None:
     tv = snap.get("trace_8dev")
     if tv is not None and not tv["ok"]:
         raise SystemExit(f"8-device trace invalid: {tv['problems']}")
+    cl = snap.get("cluster")
+    if cl is not None and not cl["gate_ok"]:
+        raise SystemExit(
+            f"cluster analytics gate failed: "
+            f"clean={cl['clean']['gate_ok']} "
+            f"straggler={cl['straggler']['gate_ok']}")
 
 
 if __name__ == "__main__":

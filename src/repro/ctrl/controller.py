@@ -48,6 +48,7 @@ from repro.ctrl import elastic
 from repro.ctrl.rpc import Channel, Listener
 from repro.data.loader import WaveMaterializer
 from repro.obs import get_metrics, get_recorder, get_tracer
+from repro.obs.anomaly import AnomalyConfig, AnomalyDetector
 from repro.parallel.pipeline import pipeline_rounds, rounds_splitter
 from repro.sched.calibrate import OnlineCalibrator, fit_length_of
 from repro.sched.service import SchedulerService
@@ -100,6 +101,19 @@ class ControllerConfig:
     # fake per-rank clock on the owning worker (validates the straggler
     # feedback loop end-to-end; tests and gamedays)
     slow_ranks: Optional[Dict[int, float]] = None
+    # online anomaly detection over the streamed per-wave telemetry
+    # (obs/anomaly.py): every heartbeat frame feeds the detector from
+    # the reader thread, and a straggler advisory re-weights the
+    # scheduler MID-step (gated on `calibrate`).  Detection itself is
+    # passive — leaving it on never changes plans unless an advisory
+    # fires, and the defaults are conservative enough that clean runs
+    # emit none (the obs bench gates exactly that).
+    anomaly_detect: bool = True
+    anomaly_kw: Dict = field(default_factory=dict)   # AnomalyConfig overrides
+    anomaly_dumps: int = 1           # max flight-recorder dumps advisories
+                                     # may trigger (postmortem context for
+                                     # the first severe finding)
+    anomaly_dump_z: float = 6.0      # severity needed to trigger a dump
     # serve mode: ServeConfig kwargs for each worker's engine (see
     # repro/serve/engine.py).  Non-None switches the cluster from the
     # training step loop to request serving: workers build a ServeEngine
@@ -126,6 +140,14 @@ class WorkerHandle:
                                      # frames (mid-step visibility; the
                                      # authoritative copy still comes
                                      # with step_done)
+        self.streamed_total = 0      # lifetime stream count (the deque
+                                     # is a window); telemetry_summary
+        self.dropped = 0             # step_done records this handle lost
+                                     # to cross-worker misalignment
+        self.on_frame: Optional[Callable[["WorkerHandle", dict], None]] \
+            = None                   # controller hook: every heartbeat
+                                     # frame, on the reader thread (the
+                                     # anomaly detector's feed)
         self._thread: Optional[threading.Thread] = None
 
     def start_reader(self) -> None:
@@ -142,12 +164,20 @@ class WorkerHandle:
                         tel = msg.get("telemetry")
                         if tel:
                             self.streamed.extend(tel)
+                            self.streamed_total += len(tel)
                             get_metrics().counter(
                                 "ctrl.waves_streamed").inc(len(tel))
                             get_recorder().record(
                                 "stream", wid=self.wid, n=len(tel),
                                 step=tel[-1].get("step"),
                                 t_wall=msg.get("t_wall"))
+                        if self.on_frame is not None:
+                            try:
+                                self.on_frame(self, msg)
+                            except Exception:
+                                log.exception(
+                                    "heartbeat hook failed (wid=%d)",
+                                    self.wid)
                         continue
                     self.progress_seen = self.last_seen   # any reply is
                     self.inbox.put(msg)                   # forward motion
@@ -224,6 +254,9 @@ class Controller:
         self.supervisor = elastic.ElasticSupervisor(
             self, timeout=ccfg.heartbeat_timeout,
             progress_timeout=ccfg.progress_timeout)
+        self.advisories: List[Dict] = []    # anomaly advisory log (survives
+        self._adv_lock = threading.Lock()   # elastic re-geometry)
+        self._adv_dumps = 0
         self._make_service(spec)
 
     # -- wiring --------------------------------------------------------
@@ -235,6 +268,11 @@ class Controller:
         self.calib = OnlineCalibrator(
             spec.coeffs, spec.hdp, self.model_cfg.num_layers,
             quadratic=spec.quadratic, ema=self.ccfg.straggler_ema)
+        # detector geometry follows the service: elastic recovery calls
+        # back through here, so rank EWMAs restart on the renumbered axis
+        self.anomaly = AnomalyDetector(
+            spec.hdp, AnomalyConfig(**self.ccfg.anomaly_kw)) \
+            if self.ccfg.anomaly_detect else None
         self.materializer = WaveMaterializer(
             self.ds, self.model_cfg, spec.capacity) \
             if self.ccfg.ship_buffers else None
@@ -281,6 +319,7 @@ class Controller:
             hello = chan.recv()
             assert hello.get("type") == "hello", hello
             h = WorkerHandle(w, chan, list(range(w * per, (w + 1) * per)))
+            h.on_frame = self._on_worker_frame
             self.handles.append(h)
             h.start_reader()
         for h in self.handles:
@@ -427,17 +466,24 @@ class Controller:
             self.service.warm_keys(keys)
         if not self.ccfg.calibrate:
             return
-        counts = [len(m.get("telemetry") or []) for m in dones.values()]
-        n_dispatch = min(counts, default=0)
+        counts = {h: len(m.get("telemetry") or [])
+                  for h, m in dones.items()}
+        n_dispatch = min(counts.values(), default=0)
         # misaligned reports truncate to the shortest worker's count —
-        # count what that throws away instead of dropping it silently
-        dropped = sum(c - n_dispatch for c in counts)
+        # count what that throws away (per handle: telemetry_summary
+        # names the worker that lost records) instead of dropping it
+        # silently
+        dropped = 0
+        for h, c in counts.items():
+            if hasattr(h, "dropped"):
+                h.dropped += c - n_dispatch
+            dropped += c - n_dispatch
         if dropped:
             get_metrics().counter("ctrl.telemetry_dropped").inc(dropped)
             log.warning(
                 "step %d: telemetry misaligned across workers "
-                "(counts=%s), dropping %d record(s)", step, counts,
-                dropped)
+                "(counts=%s), dropping %d record(s)", step,
+                list(counts.values()), dropped)
         mx = get_metrics()
         pp = self.spec.num_stages > 1
         rounds = pipeline_rounds(plan, self.ccfg.max_round_waves) \
@@ -466,6 +512,78 @@ class Controller:
                 refit = self.calib.coeffs()
                 if refit is not None:
                     self.service.update_coeffs(refit)
+
+    # -- online anomaly detection (mid-step re-planning) ---------------
+    def _on_worker_frame(self, h: WorkerHandle, msg: dict) -> None:
+        """Reader-thread hook: every heartbeat frame feeds the online
+        anomaly detector — beat arrival jitter plus any streamed
+        per-wave telemetry records — and advisories apply IMMEDIATELY
+        (`_apply_advisories`), while the step is still executing."""
+        det = self.anomaly
+        if det is None:
+            return
+        advs = det.ingest_heartbeat(h.wid, time.monotonic(),
+                                    self.ccfg.heartbeat_interval)
+        for rec in (msg.get("telemetry") or []):
+            advs += det.ingest_wave(h.wid, rec)
+        if advs:
+            self._apply_advisories(advs)
+
+    def _apply_advisories(self, advs) -> None:
+        """Act on detector findings: metrics + flight-recorder + trace
+        marker always; a straggler advisory additionally pushes the
+        calibrator's speed estimate into `SchedulerService` NOW — the
+        mid-step half of the §6.1 feedback loop (step-boundary `ingest`
+        remains the authoritative refinement).  Severe findings trigger
+        a bounded number of flight-recorder dumps."""
+        mx = get_metrics()
+        with self._adv_lock:          # serialize across reader threads
+            for a in advs:
+                rec = a.to_dict()
+                rec["ctrl_step"] = self.step
+                mx.counter("anomaly.advisories").inc()
+                mx.counter(f"anomaly.{a.kind}").inc()
+                get_tracer().instant(f"advisory:{a.kind}", rank=a.rank,
+                                     worker=a.worker,
+                                     severity=a.severity)
+                applied = False
+                if a.kind == "straggler" and a.rank is not None \
+                        and a.slowdown and self.ccfg.calibrate:
+                    self.calib.apply_advisory(a.rank, a.slowdown)
+                    self.service.update_rank_speed(self.calib.rank_speed())
+                    rec["rank_speed_after"] = [
+                        round(float(s), 4)
+                        for s in self.service.rank_speed]
+                    applied = True
+                rec["applied"] = applied
+                get_recorder().record("advisory", **{
+                    ("advisory_kind" if k == "kind" else k): v
+                    for k, v in rec.items()})
+                self.advisories.append(rec)
+                if len(self.advisories) > 512:
+                    del self.advisories[:-512]
+                log.warning("anomaly advisory: %s (applied=%s)",
+                            a.detail or a.kind, applied)
+                if a.severity >= self.ccfg.anomaly_dump_z \
+                        and self._adv_dumps < self.ccfg.anomaly_dumps:
+                    self._adv_dumps += 1
+                    get_recorder().dump(f"advisory_{a.kind}")
+
+    def telemetry_summary(self) -> Dict[int, Dict]:
+        """Per-worker view of the streamed-telemetry deques — wave
+        counts, last-seen stream record, drop counts — for the report
+        and the bench (the deques themselves stay internal)."""
+        out: Dict[int, Dict] = {}
+        for h in self.handles:
+            last = h.streamed[-1] if h.streamed else {}
+            out[h.wid] = {"ranks": list(h.ranks), "alive": h.alive,
+                          "streamed": h.streamed_total,
+                          "buffered": len(h.streamed),
+                          "dropped": h.dropped,
+                          "last_step": last.get("step"),
+                          "last_t_wall": last.get("t_wall"),
+                          "progress": h.progress}
+        return out
 
     # -- serving (request router) --------------------------------------
     def run_serve(self, stop: Optional[threading.Event] = None,

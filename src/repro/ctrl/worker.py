@@ -29,6 +29,7 @@ sets XLA flags in the child environment before this module imports jax).
 from __future__ import annotations
 
 import argparse
+import os
 import threading
 import time
 from typing import Dict, List, Optional
@@ -46,14 +47,19 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def make_telemetry_record(ranks, measured, fresh: bool,
-                          step: Optional[int] = None) -> Dict:
+                          step: Optional[int] = None,
+                          wall_s: Optional[float] = None) -> Dict:
     """One dispatched wave (or pipelined round) as a wire record.  A
     scalar measurement (real wall clock) is this process's local time —
     attributed to every owned rank, which is exactly what a per-host
     agent can observe; a vector (fault-injection clock) is sliced to the
-    owned ranks.  Every record is double-stamped — ``t_mono`` for
-    intra-process ordering, ``t_wall`` for cross-worker trace alignment
-    (monotonic clocks share no epoch across processes)."""
+    owned ranks.  ``wall_s`` is the TRUE host wall of the dispatch —
+    identical to a scalar ``measured``, but still real when ``measured``
+    is a modeled fault-clock vector (the anomaly detector subtracts it
+    from the record-to-record cadence to isolate dispatch idle).  Every
+    record is double-stamped — ``t_mono`` for intra-process ordering,
+    ``t_wall`` for cross-worker trace alignment (monotonic clocks share
+    no epoch across processes)."""
     exact = np.ndim(measured) > 0
     if exact:
         times = np.asarray(measured, float)[list(ranks)]
@@ -65,6 +71,8 @@ def make_telemetry_record(ranks, measured, fresh: bool,
                                   # to every owned rank
            "fresh": bool(fresh),
            "t_mono": monotime(), "t_wall": time.time()}
+    if wall_s is not None:
+        rec["wall_s"] = float(wall_s)
     if step is not None:
         rec["step"] = int(step)
     return rec
@@ -198,7 +206,27 @@ class WorkerAgent:
             raise
         finally:
             self._hb_stop.set()
+            self._export_trace()
             self.chan.close()
+
+    def _export_trace(self) -> None:
+        """On exit, write this process's Chrome trace into
+        ``$REPRO_TRACE_DIR`` (one file per agent, named by its lane) —
+        the per-process input set `repro.obs.analyze` merges into the
+        cluster timeline.  Never raises: a trace-export failure must
+        not mask whatever ended the agent loop."""
+        tdir = os.environ.get("REPRO_TRACE_DIR")
+        tr = get_tracer()
+        if not tdir or not tr.enabled:
+            return
+        try:
+            os.makedirs(tdir, exist_ok=True)
+            safe = "".join(c if c.isalnum() or c in "-_" else "_"
+                           for c in tr.process)[:48]
+            tr.to_chrome(os.path.join(
+                tdir, f"trace_{safe}_{os.getpid()}.json"))
+        except OSError:
+            pass
 
     def _start_heartbeat(self, interval: float) -> None:
         def beat():
@@ -311,7 +339,8 @@ class WorkerAgent:
         if state is not None:
             self.trainer.extra_data_state = state
 
-    def _on_dispatch(self, waves, measured, fresh: bool) -> None:
+    def _on_dispatch(self, waves, measured, fresh: bool,
+                     wall_s: Optional[float] = None) -> None:
         """One dispatched wave (or pipelined round): record the wall times
         of the ranks this worker owns (`make_telemetry_record`).  The
         record lands in two places — ``_telemetry``, the authoritative
@@ -321,7 +350,8 @@ class WorkerAgent:
         self._progress += 1          # hang detection: heartbeats carry it
         rec = make_telemetry_record(
             self.ranks, measured, fresh,
-            step=self.trainer.step if self.trainer is not None else None)
+            step=self.trainer.step if self.trainer is not None else None,
+            wall_s=wall_s)
         self._telemetry.append(rec)
         with self._stream_lock:
             self._stream_pending.append(rec)

@@ -38,7 +38,8 @@ def _resolve_config(args):
 
 def _run_ctrl(args):
     """Distributed control plane: controller here, workers spawned as
-    local subprocesses (launch/cluster.py)."""
+    local subprocesses (launch/cluster.py).  Returns the controller so
+    the exit path can render advisories / telemetry."""
     from repro.core.planner import PlanSpec
     from repro.ctrl.controller import Controller, ControllerConfig
     from repro.launch.cluster import LocalCluster
@@ -55,6 +56,7 @@ def _run_ctrl(args):
         heartbeat_interval=args.heartbeat_interval,
         heartbeat_timeout=args.heartbeat_timeout,
         max_round_waves=args.max_round_waves,
+        anomaly_detect=not args.no_anomaly,
         runtime_kw={"remat": "none"}, opt_kw={"lr": args.lr}))
     cluster = LocalCluster(ctl)
     addr = cluster.start()
@@ -67,6 +69,34 @@ def _run_ctrl(args):
             f"workers {r['workers']}", flush=True))
     finally:
         cluster.shutdown()
+    return ctl
+
+
+def _analyze_trace_dir(trace_dir):
+    """Merge every per-process trace in ``trace_dir`` onto the cluster
+    timeline (workers export there on exit via $REPRO_TRACE_DIR; the
+    controller's own trace is written just before this runs) and return
+    (attribution records, mfu/goodput dict) — or (None, None) when
+    there is nothing to merge."""
+    import glob
+    import json
+
+    from repro.obs.analyze import (attribute_steps, merge_traces,
+                                   mfu_goodput)
+    paths = sorted(p for p in
+                   glob.glob(os.path.join(trace_dir, "trace_*.json"))
+                   if "merged" not in os.path.basename(p))
+    if not paths:
+        return None, None
+    merged = merge_traces(paths)
+    out = os.path.join(trace_dir, "trace_merged.json")
+    with open(out, "w") as f:
+        json.dump(merged, f)
+        f.write("\n")
+    print(f"merged cluster trace ({len(paths)} processes) -> {out}",
+          flush=True)
+    attribution = attribute_steps(merged)
+    return attribution, mfu_goodput(merged, attribution)
 
 
 def main():
@@ -125,6 +155,17 @@ def main():
                     help="export the Chrome trace_event JSON here on "
                          "exit (open in https://ui.perfetto.dev); "
                          "implies --trace")
+    ap.add_argument("--trace-dir", default=None,
+                    help="cluster tracing (--ctrl): every process "
+                         "exports its trace into this directory on exit "
+                         "(workers via REPRO_TRACE_DIR) and the launcher "
+                         "merges them onto one wall-clock timeline "
+                         "(trace_merged.json) with time attribution and "
+                         "MFU/goodput in the --report; implies --trace")
+    ap.add_argument("--no-anomaly", action="store_true",
+                    help="disable the controller's online anomaly "
+                         "detector (straggler / wave-gap / throughput "
+                         "advisories over the streamed telemetry)")
     ap.add_argument("--metrics-out", default=None,
                     help="append one JSONL metrics record per step here")
     ap.add_argument("--report", action="store_true",
@@ -133,23 +174,40 @@ def main():
 
     from repro.obs import (configure as obs_configure, get_metrics,
                            get_recorder, get_tracer, render_report)
-    if args.trace or args.trace_out:
+    if args.trace or args.trace_out or args.trace_dir:
         obs_configure(trace=True, trace_process="main")
         os.environ["REPRO_TRACE"] = "1"     # --ctrl workers inherit
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
+        os.environ["REPRO_TRACE_DIR"] = args.trace_dir
     if args.metrics_out:
         obs_configure(metrics_path=args.metrics_out)
     get_recorder().install_excepthook()
 
     if args.ctrl:
+        ctl = None
         try:
-            return _run_ctrl(args)
+            ctl = _run_ctrl(args)
+            return
         finally:
             if args.trace_out:
                 get_tracer().to_chrome(args.trace_out)
                 print(f"trace -> {args.trace_out}", flush=True)
+            attribution = mfu = None
+            if args.trace_dir:
+                # Workers already exported on shutdown; add ours, merge.
+                get_tracer().to_chrome(os.path.join(
+                    args.trace_dir, f"trace_controller_{os.getpid()}.json"))
+                attribution, mfu = _analyze_trace_dir(args.trace_dir)
             if args.report:
-                print(render_report(metrics=get_metrics(),
-                                    title="controller"), flush=True)
+                print(render_report(
+                    metrics=get_metrics(),
+                    calib=ctl.calib.summary() if ctl is not None else None,
+                    attribution=attribution, mfu=mfu,
+                    advisories=ctl.advisories if ctl is not None else None,
+                    telemetry=ctl.telemetry_summary()
+                    if ctl is not None else None,
+                    title="controller"), flush=True)
 
     cfg, ds = _resolve_config(args)
 

@@ -20,12 +20,16 @@ update.  `configure()` is the one knob surface:
 
 Environment: ``REPRO_TRACE=1`` enables tracing at import (the knob
 subprocess workers inherit), ``REPRO_OBS_DIR`` sets where flight-recorder
-dumps land.
+dumps land (default ``obs_out/``), ``REPRO_TRACE_DIR`` makes ctrl worker
+agents export their Chrome trace there on exit (one file per process —
+the input set for ``python -m repro.obs.analyze``).
 """
 from __future__ import annotations
 
 from typing import Optional
 
+from repro.obs.analyze import attribute_steps, merge_traces, mfu_goodput
+from repro.obs.anomaly import Advisory, AnomalyConfig, AnomalyDetector
 from repro.obs.metrics import MetricsRegistry, get_metrics
 from repro.obs.recorder import FlightRecorder, get_recorder
 from repro.obs.report import render_report
@@ -34,8 +38,10 @@ from repro.obs.trace import (Tracer, get_tracer, monotime, set_tracer,
 
 __all__ = [
     "MetricsRegistry", "FlightRecorder", "Tracer",
+    "Advisory", "AnomalyConfig", "AnomalyDetector",
     "get_metrics", "get_recorder", "get_tracer", "set_tracer",
     "monotime", "render_report", "validate_chrome_trace", "configure",
+    "merge_traces", "attribute_steps", "mfu_goodput",
 ]
 
 

@@ -1,0 +1,411 @@
+"""Cluster analytics: merge per-process traces, attribute step time,
+price waves with the Eq. 2 cost model (MFU / goodput).
+
+PR 7 built the collection side — spans, metrics, streamed telemetry —
+and every Chrome trace carries an ``otherData.wall_anchor`` pair
+(monotonic µs, wall s) taken at tracer construction.  This module is
+the consumer:
+
+* `merge_traces` joins the controller's and N workers' trace files into
+  ONE cluster timeline.  Monotonic clocks share no epoch across
+  processes, so each doc's events are re-based through its wall anchor:
+  ``wall(ev) = wall_s + (ts_us - mono_us) / 1e6``, then shifted onto a
+  common zero.  Colliding pids are renumbered (each source keeps its
+  lane structure) and the merged doc passes `validate_chrome_trace`.
+
+* `attribute_steps` decomposes each (step × lane) window into
+  **compute** (wave/round spans minus nested compiles), **dispatch**
+  (plan / materialize / apply / checkpoint), **bubble** (uncovered time
+  between the first and last compute span — the wave-gap the planner's
+  makespan model calls bubble) and **stall** (compile time + uncovered
+  time outside the compute envelope).  The four buckets sum to the
+  window by construction — the invariant the obs bench gates at 5%
+  against the measured step wall.
+
+* `mfu_goodput` prices every dispatched wave with the planner's Eq. 2
+  FLOPs model: the trainer stamps each wave/round span with its modeled
+  per-rank cost (``cost_max`` / ``cost_sum`` seconds, embedding
+  peak_flops x assumed-MFU via `core.offload.analytic_coeffs`).  A
+  fleet scale (median measured-wall / cost_max over warm waves) removes
+  the model's absolute error; what remains is model-relative
+  utilization — useful fleet-seconds / (hdp x wall) — per step and
+  cumulative.  Goodput counts only the FINAL occurrence of each step
+  index (a step replayed after elastic recovery was wasted work) over
+  the whole trace extent, recoveries and re-plans included.
+
+CLI::
+
+    python -m repro.obs.analyze trace_*.json [--metrics metrics.jsonl]
+        [--out merged.json] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.obs.trace import validate_chrome_trace
+
+#: Span-name taxonomy (train/trainer.py, sched/service.py,
+#: ctrl/controller.py) -> attribution bucket.
+COMPUTE_SPANS = ("wave", "round")
+DISPATCH_SPANS = ("plan", "materialize", "apply", "checkpoint",
+                  "plan_window", "materialize_ahead", "plan_pool")
+STALL_SPANS = ("compile", "await_step")
+
+
+# ---------------------------------------------------------------------------
+# trace merging
+# ---------------------------------------------------------------------------
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _anchor_of(doc: dict) -> Tuple[float, float]:
+    a = (doc.get("otherData") or {}).get("wall_anchor") or {}
+    if "mono_us" not in a or "wall_s" not in a:
+        raise ValueError(
+            "trace has no otherData.wall_anchor — cannot align it onto "
+            "the cluster timeline (re-export with repro.obs.Tracer)")
+    return float(a["mono_us"]), float(a["wall_s"])
+
+
+def merge_traces(docs: Sequence, validate: bool = False) -> dict:
+    """One cluster-wide Chrome trace from per-process trace docs (or
+    file paths).  Every event's ``ts`` is re-based onto a shared
+    wall-clock timeline (µs since the earliest event across all docs)
+    via each doc's ``wall_anchor``; pids colliding across docs are
+    renumbered so each process keeps a distinct lane.  With
+    ``validate=True`` the merged doc is schema-checked and a failure
+    raises ``ValueError``."""
+    docs = [load_trace(d) if isinstance(d, str) else d for d in docs]
+    if not docs:
+        raise ValueError("merge_traces needs at least one trace doc")
+    rebased: List[Tuple[dict, List[dict]]] = []   # (doc, wall-us events)
+    for doc in docs:
+        mono_us, wall_s = _anchor_of(doc)
+        evs = []
+        for e in doc.get("traceEvents", []):
+            e = dict(e)
+            if e.get("ph") != "M":     # meta rows stay pinned at ts 0
+                e["ts"] = wall_s * 1e6 + (float(e["ts"]) - mono_us)
+            evs.append(e)
+        rebased.append((doc, evs))
+
+    # common zero: the earliest non-meta event on the shared wall line
+    starts = [e["ts"] for _, evs in rebased for e in evs
+              if e.get("ph") != "M"]
+    t0 = min(starts) if starts else 0.0
+
+    used_pids: set = set()
+    merged: List[dict] = []
+    sources: List[dict] = []
+    for doc, evs in rebased:
+        pids = sorted({e["pid"] for e in evs})
+        remap: Dict[int, int] = {}
+        for pid in pids:
+            new = pid
+            while new in used_pids:
+                new += 1               # next free lane, order-preserving
+            remap[pid] = new
+            used_pids.add(new)
+        for e in evs:
+            e["pid"] = remap[e["pid"]]
+            if e.get("ph") != "M":
+                e["ts"] = e["ts"] - t0
+            merged.append(e)
+        od = doc.get("otherData") or {}
+        sources.append({"process": od.get("process"),
+                        "pid_map": {str(k): v for k, v in remap.items()},
+                        "dropped_events": od.get("dropped_events", 0)})
+    merged.sort(key=lambda e: (0 if e.get("ph") == "M" else 1,
+                               float(e.get("ts", 0.0))))
+    out = {"traceEvents": merged, "displayTimeUnit": "ms",
+           "otherData": {"clock": "wall-aligned",
+                         "merged_from": len(docs),
+                         "wall_anchor": {"mono_us": 0.0,
+                                         "wall_s": t0 / 1e6},
+                         "sources": sources}}
+    if validate:
+        ok, problems = validate_chrome_trace(out)
+        if not ok:
+            raise ValueError(f"merged trace invalid: {problems[:4]}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# time attribution
+# ---------------------------------------------------------------------------
+
+def _proc_names(doc: dict) -> Dict[int, str]:
+    return {e["pid"]: e["args"]["name"]
+            for e in doc.get("traceEvents", [])
+            if e.get("ph") == "M" and e.get("name") == "process_name"
+            and e.get("args", {}).get("name")}
+
+
+def _step_spans(doc: dict) -> Dict[Tuple[int, int], List[dict]]:
+    """(pid, tid) -> "X" spans carrying an ``args.step`` stamp.  Only
+    the busiest step-stamped tid per pid is kept — the step loop lane —
+    so planner-thread lookahead spans (stamped with FUTURE steps they
+    plan ahead for) don't smear into the executing step's window."""
+    lanes: Dict[Tuple[int, int], List[dict]] = {}
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") == "X" and "step" in (e.get("args") or {}):
+            lanes.setdefault((e["pid"], e["tid"]), []).append(e)
+    best: Dict[int, Tuple[int, int]] = {}
+    for (pid, tid), evs in lanes.items():
+        if pid not in best or len(evs) > len(lanes[best[pid]]):
+            best[pid] = (pid, tid)
+    return {k: lanes[k] for k in best.values()}
+
+
+def _subtract_covered(window: Tuple[float, float],
+                      tops: List[Tuple[float, float]]) -> List[
+                          Tuple[float, float]]:
+    """Uncovered sub-intervals of ``window`` given sorted disjoint
+    top-level span intervals."""
+    gaps = []
+    cur = window[0]
+    for t0, t1 in tops:
+        if t0 > cur:
+            gaps.append((cur, min(t0, window[1])))
+        cur = max(cur, t1)
+    if cur < window[1]:
+        gaps.append((cur, window[1]))
+    return [(a, b) for a, b in gaps if b > a]
+
+
+def _overlap(a: Tuple[float, float], b: Tuple[float, float]) -> float:
+    return max(0.0, min(a[1], b[1]) - max(a[0], b[0]))
+
+
+def attribute_steps(doc: dict) -> List[dict]:
+    """Per (step × lane) wall-time decomposition.  Returns one record
+    per step per process lane carrying step-stamped spans, with
+    ``compute_s + dispatch_s + bubble_s + stall_s == window_s`` (exact
+    up to float rounding — ``check`` reports the ratio).  A lane whose
+    step window is a single enclosing span (the controller's
+    ``ctrl_step``) is peeled: the wrapper defines the window and its
+    children are attributed."""
+    names = _proc_names(doc)
+    recs: List[dict] = []
+    for (pid, tid), evs in sorted(_step_spans(doc).items()):
+        by_step: Dict[int, List[dict]] = {}
+        for e in evs:
+            by_step.setdefault(int(e["args"]["step"]), []).append(e)
+        for step, spans in sorted(by_step.items()):
+            iv = [(float(e["ts"]), float(e["ts"]) + float(e["dur"]),
+                   e["name"]) for e in spans]
+            w0, w1 = min(t0 for t0, _, _ in iv), max(t1 for _, t1, _ in iv)
+            # peel a wrapper span covering the whole window (ctrl_step)
+            wrappers = [x for x in iv
+                        if x[0] <= w0 + 1e-6 and x[1] >= w1 - 1e-6]
+            inner = [x for x in iv if x not in wrappers] or wrappers[-1:]
+            # top-level selection: sort (start asc, dur desc); a span
+            # contained in the previous top-level span is nested
+            inner.sort(key=lambda x: (x[0], -(x[1] - x[0])))
+            tops: List[Tuple[float, float, str]] = []
+            nested: List[Tuple[float, float, str]] = []
+            for t0, t1, name in inner:
+                if tops and t1 <= tops[-1][1] + 1e-6 \
+                        and t0 >= tops[-1][0] - 1e-6:
+                    nested.append((t0, t1, name))
+                else:
+                    tops.append((t0, t1, name))
+            compute = dispatch = stall = 0.0
+            n_waves = 0
+            for t0, t1, name in tops:
+                dur = t1 - t0
+                if name in COMPUTE_SPANS:
+                    n_waves += 1
+                    compile_s = sum(min(t1, n1) - max(t0, n0)
+                                    for n0, n1, nm in nested
+                                    if nm in STALL_SPANS
+                                    and n0 >= t0 - 1e-6 and n1 <= t1 + 1e-6)
+                    compile_s = min(max(compile_s, 0.0), dur)
+                    compute += dur - compile_s
+                    stall += compile_s
+                elif name in STALL_SPANS:
+                    stall += dur
+                else:                  # plan/materialize/apply/... and
+                    dispatch += dur    # any future span name
+            # uncovered time: inside the compute envelope it's bubble
+            # (wave-gap), outside it's stall
+            env = None
+            cts = [(t0, t1) for t0, t1, nm in tops if nm in COMPUTE_SPANS]
+            if cts:
+                env = (min(t0 for t0, _ in cts), max(t1 for _, t1 in cts))
+            gaps = _subtract_covered((w0, w1),
+                                     [(t0, t1) for t0, t1, _ in tops])
+            bubble = 0.0
+            for g in gaps:
+                if env is not None:
+                    b = _overlap(g, env)
+                    bubble += b
+                    stall += (g[1] - g[0]) - b
+                else:
+                    stall += g[1] - g[0]
+            window = (w1 - w0) / 1e6
+            parts = [compute / 1e6, dispatch / 1e6, bubble / 1e6,
+                     stall / 1e6]
+            recs.append({
+                "step": step, "pid": pid, "tid": tid,
+                "process": names.get(pid, f"pid{pid}"),
+                "t0_us": w0, "window_s": window,
+                "compute_s": parts[0], "dispatch_s": parts[1],
+                "bubble_s": parts[2], "stall_s": parts[3],
+                "n_waves": n_waves,
+                "check": sum(parts) / window if window > 0 else 1.0})
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# MFU / goodput
+# ---------------------------------------------------------------------------
+
+def mfu_goodput(doc: dict,
+                attribution: Optional[List[dict]] = None) -> dict:
+    """Price every dispatched wave with the Eq. 2 cost model against its
+    measured wall.  Wave/round spans carry ``cost_max`` / ``cost_sum``
+    (modeled per-rank seconds from `Wave.costs`) and ``tokens``; the
+    fleet scale — median(measured wall / cost_max) over warm waves —
+    removes the model's absolute calibration so ``mfu`` is
+    model-relative utilization: useful fleet-seconds / (hdp × wall).
+    Only each (lane, step, idx)'s FINAL occurrence counts (replays
+    after elastic recovery were waste); ``goodput`` divides final-step
+    wall by the full trace extent, recoveries included."""
+    if attribution is None:
+        attribution = attribute_steps(doc)
+    waves: Dict[Tuple[int, int, int], dict] = {}
+    extent_lo, extent_hi = np.inf, -np.inf
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") != "X":
+            continue
+        t0, t1 = float(e["ts"]), float(e["ts"]) + float(e["dur"])
+        extent_lo, extent_hi = min(extent_lo, t0), max(extent_hi, t1)
+        a = e.get("args") or {}
+        if e["name"] in COMPUTE_SPANS and "cost_max" in a:
+            key = (e["pid"], int(a.get("step", -1)), int(a.get("idx", 0)))
+            prev = waves.get(key)
+            if prev is None or t0 > prev["ts"]:    # final occurrence
+                waves[key] = {
+                    "ts": t0, "wall_s": (t1 - t0) / 1e6,
+                    "cost_max": float(a["cost_max"]),
+                    "cost_sum": float(a["cost_sum"]),
+                    "tokens": int(a.get("tokens", 0)),
+                    "hdp": len(a.get("composition") or []) or 1,
+                    "fresh": bool(a.get("fresh", False))}
+    if not waves:
+        return {"n_waves": 0, "mfu": None, "goodput": None}
+    # waves are SPMD — every worker lane times the same dispatch; keep
+    # one lane per (step, idx): the slowest (the fleet-visible wall)
+    fleet: Dict[Tuple[int, int], dict] = {}
+    for (pid, step, idx), w in waves.items():
+        k = (step, idx)
+        if k not in fleet or w["wall_s"] > fleet[k]["wall_s"]:
+            fleet[k] = w
+    warm = [w for w in fleet.values()
+            if not w["fresh"] and w["cost_max"] > 0]
+    pool = warm or [w for w in fleet.values() if w["cost_max"] > 0]
+    scale = float(np.median([w["wall_s"] / w["cost_max"] for w in pool])) \
+        if pool else 1.0
+
+    # final occurrence of each step: the widest step window across lanes
+    step_windows: Dict[int, float] = {}
+    for r in attribution:
+        cur = step_windows.get(r["step"], 0.0)
+        step_windows[r["step"]] = max(cur, r["window_s"])
+    per_step: List[dict] = []
+    useful_fleet_s = 0.0
+    denom_fleet_s = 0.0
+    for step in sorted(step_windows):
+        sw = [w for (s, _), w in fleet.items() if s == step]
+        if not sw:
+            continue
+        hdp = max(w["hdp"] for w in sw)
+        useful = sum(w["cost_sum"] * scale for w in sw)
+        wall = step_windows[step]
+        useful_fleet_s += useful
+        denom_fleet_s += hdp * wall
+        per_step.append({
+            "step": step, "wall_s": round(wall, 6),
+            "waves": len(sw),
+            "tokens": int(sum(w["tokens"] for w in sw)),
+            "mfu": round(useful / (hdp * wall), 4) if wall > 0 else None})
+    extent_s = max((extent_hi - extent_lo) / 1e6, 1e-9)
+    useful_wall = sum(step_windows.values())
+    tokens = sum(r["tokens"] for r in per_step)
+    return {"n_waves": len(fleet),
+            "scale": round(scale, 6),
+            "mfu": round(useful_fleet_s / denom_fleet_s, 4)
+            if denom_fleet_s > 0 else None,
+            "goodput": round(min(useful_wall / extent_s, 1.0), 4),
+            "useful_s": round(useful_wall, 6),
+            "total_s": round(extent_s, 6),
+            "tokens": int(tokens),
+            "tokens_per_s": round(tokens / extent_s, 1),
+            "per_step": per_step}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _load_metrics_jsonl(path: str) -> Optional[dict]:
+    last = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                last = json.loads(line)
+    return last
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.analyze",
+        description="Merge per-process Chrome traces into one cluster "
+                    "timeline, attribute step time, report MFU/goodput.")
+    ap.add_argument("traces", nargs="+", help="trace_*.json files")
+    ap.add_argument("--metrics", default=None,
+                    help="per-step metrics JSONL (launcher --metrics-out)"
+                         "; the last record joins the report")
+    ap.add_argument("--out", default=None,
+                    help="write the merged Chrome trace here")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable summary instead of the report")
+    args = ap.parse_args(argv)
+
+    merged = merge_traces(args.traces)
+    ok, problems = validate_chrome_trace(merged)
+    attribution = attribute_steps(merged)
+    mfu = mfu_goodput(merged, attribution)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(merged, f)
+            f.write("\n")
+    metrics = _load_metrics_jsonl(args.metrics) if args.metrics else None
+    if args.json:
+        print(json.dumps({"valid": ok, "problems": problems[:8],
+                          "n_events": len(merged["traceEvents"]),
+                          "attribution": attribution, "mfu": mfu},
+                         indent=1, sort_keys=True))
+    else:
+        from repro.obs.report import render_report
+        print(render_report(metrics=metrics, attribution=attribution,
+                            mfu=mfu, title="cluster analysis "
+                            f"({len(args.traces)} trace(s), "
+                            f"valid={ok})"))
+        if not ok:
+            print("  trace problems:", *problems[:4], sep="\n    ")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

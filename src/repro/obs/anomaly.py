@@ -1,0 +1,346 @@
+"""Online anomaly detection over the streamed per-wave telemetry.
+
+The controller's per-handle readers feed every heartbeat frame into one
+`AnomalyDetector` (ctrl/controller.py `_on_worker_frame`), which watches
+four §6.1-style production signals and emits structured `Advisory`
+records the moment a threshold trips — MID-step, not at the step
+boundary where `OnlineCalibrator.ingest` runs:
+
+* **straggler** — per-wave per-rank walls are assembled across workers
+  (each reports the ranks it owns; the same (step, wave-ordinal) pair
+  keys the join).  Each rank's wall/fleet-median ratio feeds an EWMA;
+  a z-score against the fleet's ratio spread flags sustained straggler
+  onset.  The advisory carries a ``slowdown`` estimate the controller
+  pushes straight into `OnlineCalibrator.apply_advisory` →
+  `SchedulerService.update_rank_speed`, so un-planned windows re-weight
+  before the next step_done calibration — the ROADMAP's "make
+  re-planning consume the mid-step stream".
+* **wave_gap** — within-step IDLE time between a worker's consecutive
+  dispatches (same-process monotonic clock, so no cross-host skew).
+  Record-to-record cadence includes the arriving wave's own compute
+  wall, and under HDP wave walls are legitimately heterogeneous (a
+  packed [4] wave costs ~4x a [1,1,1,1] wave — the paper's whole
+  premise), so the raw cadence is NOT the signal: the wave's measured
+  wall is subtracted first, and the residual dispatch idle is compared
+  against the worker's own idle EWMA.  A spike means the pipeline
+  stalled between waves (materialization, host paging, planner
+  backlog), not that a long sequence was scheduled.
+* **throughput** — EWMA dispatch rate per worker vs the best sustained
+  rate seen; a droop below ``droop_frac`` of best flags fleet-wide
+  slowdown even when ranks stay balanced.
+* **heartbeat** — inter-arrival jitter of the beat frames themselves;
+  silence far beyond the configured cadence (but before the elastic
+  supervisor's declare-dead timeout) is early warning.
+
+Defaults are deliberately conservative: a clean CPU-cluster run must
+emit ZERO advisories (the obs bench and CI gate exactly that), while an
+injected 3x `slow_ranks` straggler must fire within a bounded number of
+waves.  Compile-fresh records are excluded everywhere — compile walls
+say nothing about rank speed.
+
+Thread-safety: `ingest_wave` / `ingest_heartbeat` are called from the
+controller's per-worker reader threads under one internal lock.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class AnomalyConfig:
+    # straggler (per-rank EWMA z-score on wall/median ratios)
+    ema: float = 0.5                 # EWMA weight on the PREVIOUS value
+    min_waves: int = 3               # per-rank samples before firing
+    straggler_ratio: float = 1.35    # sustained mean ratio to fire at
+    z_thresh: float = 3.0            # and z-score vs fleet spread
+    sigma_floor: float = 0.08        # ratio-spread floor (CPU jitter)
+    # wave-gap regression (per-worker, within-step, on dispatch IDLE =
+    # record-to-record gap minus the arriving wave's own measured wall)
+    gap_warmup: int = 4              # gaps observed before firing
+    gap_factor: float = 6.0          # idle > factor x EWMA(idle) ...
+    gap_floor_s: float = 1.0         # ... and above this absolute floor
+    # throughput droop (per-worker EWMA dispatch rate)
+    droop_warmup: int = 12           # gaps before the droop gate arms
+    droop_frac: float = 0.25         # rate below frac x best sustained
+    # heartbeat jitter
+    hb_warmup: int = 3               # beats before the jitter gate arms
+    hb_factor: float = 20.0          # silence > factor x cadence
+    # advisory rate limiting
+    cooldown_waves: int = 16         # per (kind, rank/worker) re-fire gap
+    max_pending_steps: int = 4       # partial cross-worker joins kept
+
+
+@dataclass
+class Advisory:
+    """One structured anomaly finding.  ``severity`` is the z-score (or
+    ratio-to-threshold for the non-statistical signals); ``slowdown``
+    is the straggler's estimated relative slowdown (>= 1)."""
+    kind: str                        # straggler|wave_gap|throughput|heartbeat
+    step: Optional[int]
+    rank: Optional[int]
+    worker: Optional[int]
+    value: float                     # the measurement that tripped
+    baseline: float                  # what "normal" was at that moment
+    severity: float
+    slowdown: Optional[float] = None
+    waves_seen: int = 0              # detector wave count at emission —
+                                     # detection latency in waves
+    detail: str = ""
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+class _Ewma:
+    __slots__ = ("mean", "var", "n", "_a")
+
+    def __init__(self, alpha: float):
+        self._a = alpha
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def update(self, x: float) -> None:
+        if self.n == 0:
+            self.mean = x
+        else:
+            d = x - self.mean
+            self.mean = self._a * self.mean + (1.0 - self._a) * x
+            self.var = self._a * self.var + (1.0 - self._a) * d * d
+        self.n += 1
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(max(self.var, 0.0)))
+
+
+class AnomalyDetector:
+    def __init__(self, hdp: int, cfg: Optional[AnomalyConfig] = None):
+        self.hdp = int(hdp)
+        self.cfg = cfg or AnomalyConfig()
+        self._lock = threading.Lock()
+        a = self.cfg.ema
+        self.waves_seen = 0              # finalized fleet waves
+        self._ratio = [_Ewma(a) for _ in range(self.hdp)]
+        self._spread = _Ewma(a)          # fleet ratio std per wave
+        # cross-worker join buffers: (step, ordinal) -> {rank: time}
+        self._pending: Dict[Tuple[int, int], Dict[int, float]] = {}
+        self._ordinal: Dict[Tuple[int, int], int] = {}   # (wid, step) -> n
+        # per-worker wave-gap / throughput state
+        self._last_mono: Dict[Tuple[int, int], float] = {}
+        self._gap: Dict[int, _Ewma] = {}       # dispatch IDLE (gap - wall)
+        self._cadence: Dict[int, _Ewma] = {}   # raw cadence, for droop
+        self._rate_best: Dict[int, float] = {}
+        # heartbeat arrivals
+        self._hb_last: Dict[int, float] = {}
+        self._hb_jitter: Dict[int, _Ewma] = {}
+        self._hb_n: Dict[int, int] = {}
+        self._cooldown: Dict[Tuple[str, int], int] = {}
+        self.advisory_counts: Dict[str, int] = {}
+
+    # -- emission ------------------------------------------------------
+    def _emit(self, key: Tuple[str, int], **kw) -> List[Advisory]:
+        """Rate-limited advisory construction (cooldown in fleet waves,
+        falling back to heartbeat count for wave-less signals)."""
+        now = self.waves_seen
+        last = self._cooldown.get(key)
+        if last is not None and now - last < self.cfg.cooldown_waves:
+            return []
+        self._cooldown[key] = now
+        adv = Advisory(waves_seen=now, **kw)
+        self.advisory_counts[adv.kind] = \
+            self.advisory_counts.get(adv.kind, 0) + 1
+        return [adv]
+
+    # -- per-wave telemetry --------------------------------------------
+    def ingest_wave(self, wid: int, rec: dict) -> List[Advisory]:
+        """One streamed telemetry record from worker ``wid`` (the wire
+        shape of `ctrl.worker.make_telemetry_record`).  Returns any
+        advisories that fired."""
+        with self._lock:
+            out: List[Advisory] = []
+            step = rec.get("step")
+            ranks = [r for r in rec.get("ranks", []) if r < self.hdp]
+            if not ranks:
+                return []
+            fresh = bool(rec.get("fresh"))
+            t_mono = rec.get("t_mono")
+            skey = (wid, -1 if step is None else int(step))
+            # -- wave-gap + throughput (same-process clock) ------------
+            if t_mono is not None:
+                if fresh:
+                    # a compile wall sits between this dispatch and the
+                    # next — drop the cursor so the next warm gap does
+                    # not span it and trip wave_gap on a clean run
+                    self._last_mono.pop(skey, None)
+                else:
+                    # the TRUE host wall when the record carries one
+                    # (``times`` may be a modeled fault-clock vector)
+                    wall = rec.get("wall_s")
+                    if wall is None:
+                        wall = max((float(t) for r, t in
+                                    zip(rec.get("ranks", []),
+                                        rec.get("times", []))
+                                    if r < self.hdp), default=0.0)
+                    out += self._observe_gap(wid, skey, float(t_mono),
+                                             step, float(wall))
+            # -- straggler: cross-worker join on (step, ordinal) -------
+            n = self._ordinal.get(skey, 0)
+            self._ordinal[skey] = n + 1
+            if fresh:
+                return out               # compile wall: no speed signal
+            jkey = (skey[1], n)
+            slot = self._pending.setdefault(jkey, {})
+            for r, t in zip(rec.get("ranks", []), rec.get("times", [])):
+                if r < self.hdp:
+                    slot[r] = float(t)
+            # finalize only on FULL rank coverage — half-joined waves
+            # would compute medians over one worker's ranks and count
+            # each physical wave twice.  A dead worker's never-completed
+            # joins age out via _trim_pending (and a MembershipChange
+            # rebuilds the detector at the new geometry anyway).
+            if len(slot) >= self.hdp:
+                del self._pending[jkey]
+                out += self._observe_fleet_wave(slot, step, wid)
+            self._trim_pending(skey[1])
+            return out
+
+    def _trim_pending(self, cur_step: int) -> None:
+        stale = [k for k in self._pending
+                 if cur_step - k[0] > self.cfg.max_pending_steps]
+        for k in stale:
+            del self._pending[k]
+
+    def _observe_gap(self, wid: int, skey: Tuple[int, int],
+                     t_mono: float, step,
+                     wall: float = 0.0) -> List[Advisory]:
+        out: List[Advisory] = []
+        cfg = self.cfg
+        last = self._last_mono.get(skey)
+        self._last_mono[skey] = t_mono
+        # keep only the active step's cursor per worker
+        for k in [k for k in self._last_mono if k[0] == wid and k != skey]:
+            del self._last_mono[k]
+        if last is None:
+            return out
+        gap = t_mono - last
+        if gap <= 0:
+            return out
+        # record-to-record cadence includes the arriving wave's OWN
+        # compute wall; under HDP those walls legitimately vary ~4x with
+        # composition, so the stall signal is the residual dispatch idle
+        idle = max(0.0, gap - wall)
+        ew = self._gap.setdefault(wid, _Ewma(cfg.ema))
+        cad = self._cadence.setdefault(wid, _Ewma(cfg.ema))
+        if ew.n >= cfg.gap_warmup:
+            thresh = max(cfg.gap_factor * ew.mean, cfg.gap_floor_s)
+            if idle > thresh:
+                out += self._emit(
+                    ("wave_gap", wid), kind="wave_gap", step=step,
+                    rank=None, worker=wid, value=idle, baseline=ew.mean,
+                    severity=idle / max(thresh, 1e-9),
+                    detail=f"dispatch idle {idle:.3f}s (gap {gap:.3f}s"
+                           f" - wave wall {wall:.3f}s) vs EWMA "
+                           f"{ew.mean:.3f}s")
+            rate = 1.0 / max(gap, 1e-9)
+            ew_rate = 1.0 / max(cad.mean, 1e-9)
+            best = self._rate_best.get(wid, 0.0)
+            if cad.n >= cfg.droop_warmup:
+                self._rate_best[wid] = best = max(best, ew_rate)
+                if best > 0 and rate < cfg.droop_frac * best \
+                        and ew_rate < cfg.droop_frac * best:
+                    out += self._emit(
+                        ("throughput", wid), kind="throughput",
+                        step=step, rank=None, worker=wid,
+                        value=ew_rate, baseline=best,
+                        severity=best / max(ew_rate, 1e-9),
+                        detail=f"dispatch rate {ew_rate:.2f}/s vs best "
+                               f"{best:.2f}/s")
+        ew.update(idle)
+        cad.update(gap)
+        return out
+
+    def _observe_fleet_wave(self, slot: Dict[int, float], step,
+                            wid: int) -> List[Advisory]:
+        out: List[Advisory] = []
+        cfg = self.cfg
+        times = np.asarray([slot.get(r, 0.0) for r in range(self.hdp)])
+        pos = times[times > 0]
+        if pos.size < 2:
+            return out
+        med = float(np.median(pos))
+        if med <= 0:
+            return out
+        self.waves_seen += 1
+        ratios = times / med
+        # robust fleet spread: MAD around the median ratio (x1.4826 for
+        # normal consistency).  A plain std is inflated by the straggler
+        # itself — a 3x rank on hdp=4 gives std~0.87, so z=(3-1)/0.87
+        # would never cross z_thresh and the detector could not fire on
+        # exactly the fault it exists for.
+        dev = np.abs(ratios[times > 0] - float(np.median(ratios[times > 0])))
+        self._spread.update(1.4826 * float(np.median(dev)))
+        sigma = max(self._spread.mean, cfg.sigma_floor)
+        for r in range(self.hdp):
+            if times[r] <= 0:
+                continue
+            ew = self._ratio[r]
+            ew.update(float(ratios[r]))
+            if ew.n < cfg.min_waves:
+                continue
+            z = (ew.mean - 1.0) / sigma
+            if ew.mean >= cfg.straggler_ratio and z >= cfg.z_thresh:
+                out += self._emit(
+                    ("straggler", r), kind="straggler", step=step,
+                    rank=r, worker=wid, value=float(ratios[r]),
+                    baseline=1.0, severity=float(z),
+                    slowdown=float(max(ew.mean, 1.0)),
+                    detail=f"rank {r} EWMA wall/median {ew.mean:.2f} "
+                           f"(z={z:.1f} over {ew.n} waves)")
+        return out
+
+    # -- heartbeat arrivals --------------------------------------------
+    def ingest_heartbeat(self, wid: int, t_arrival: float,
+                         interval: float) -> List[Advisory]:
+        """One heartbeat frame's arrival time (controller's monotonic
+        clock) against the configured cadence."""
+        with self._lock:
+            out: List[Advisory] = []
+            cfg = self.cfg
+            last = self._hb_last.get(wid)
+            self._hb_last[wid] = t_arrival
+            n = self._hb_n.get(wid, 0)
+            self._hb_n[wid] = n + 1
+            if last is None:
+                return out
+            delta = t_arrival - last
+            jit = self._hb_jitter.setdefault(wid, _Ewma(cfg.ema))
+            jit.update(abs(delta - interval))
+            if n >= cfg.hb_warmup and interval > 0 \
+                    and delta > cfg.hb_factor * interval:
+                out += self._emit(
+                    ("heartbeat", wid), kind="heartbeat", step=None,
+                    rank=None, worker=wid, value=delta,
+                    baseline=interval,
+                    severity=delta / interval,
+                    detail=f"beat silence {delta:.2f}s vs cadence "
+                           f"{interval:.2f}s")
+            return out
+
+    # -- reporting -----------------------------------------------------
+    def summary(self) -> dict:
+        with self._lock:
+            return {
+                "waves_seen": self.waves_seen,
+                "advisories": dict(self.advisory_counts),
+                "rank_ratio_ewma": [round(e.mean, 4) if e.n else None
+                                    for e in self._ratio],
+                "ratio_spread": round(self._spread.mean, 4)
+                if self._spread.n else None,
+                "hb_jitter_s": {w: round(e.mean, 4)
+                                for w, e in self._hb_jitter.items()},
+                "pending_joins": len(self._pending)}

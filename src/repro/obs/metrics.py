@@ -101,16 +101,24 @@ class Histogram:
             self._buckets[min(max(i, 0), self._N_BUCKETS - 1)] += 1
 
     def quantile(self, q: float) -> float:
-        """Bucketed quantile estimate (upper edge of the q-th bucket)."""
+        """Quantile estimate interpolated within the log2 bucket holding
+        the q-th sample (rank-fraction linear between the bucket edges),
+        clamped to the observed [min, max] so degenerate distributions
+        (all samples equal) answer exactly."""
         with self._lock:
             if self.count == 0:
                 return 0.0
-            target = q * self.count
+            target = min(max(q, 0.0), 1.0) * self.count
             acc = 0
             for i, n in enumerate(self._buckets):
+                if n == 0:
+                    continue
+                if acc + n >= target:
+                    lo = 2.0 ** (i - self._OFFSET)
+                    hi = 2.0 ** (i + 1 - self._OFFSET)
+                    est = lo + (hi - lo) * (target - acc) / n
+                    return float(min(max(est, self.min), self.max))
                 acc += n
-                if acc >= target:
-                    return float(2.0 ** (i + 1 - self._OFFSET))
             return float(self.max)
 
     def summary(self) -> dict:
@@ -157,8 +165,12 @@ class MetricsRegistry:
         out: dict = {}
         for name, m in sorted(items):
             if isinstance(m, Histogram):
-                for k, v in m.summary().items():
+                s = m.summary()
+                for k, v in s.items():
                     out[f"{name}.{k}"] = v
+                if s.get("count"):
+                    out[f"{name}.p50"] = m.quantile(0.5)
+                    out[f"{name}.p99"] = m.quantile(0.99)
             else:
                 v = m.value
                 if v is not None:

@@ -13,9 +13,10 @@ tail and a metrics snapshot — to a JSON file when something dies:
 * a worker agent dumps on any uncaught exception escaping its loop;
 * `install_excepthook()` catches anything else at interpreter level.
 
-Dump location: ``$REPRO_OBS_DIR`` (created if needed) or the CWD;
-filenames are ``flightrec_<reason>_<pid>_<n>.json``.  Recording is
-always on — the ring is a few hundred small dicts.
+Dump location: ``$REPRO_OBS_DIR`` (created if needed), defaulting to
+``obs_out/`` so postmortems never litter the working tree; filenames
+are ``flightrec_<reason>_<pid>_<n>.json``.  Recording is always on —
+the ring is a few hundred small dicts.
 """
 from __future__ import annotations
 
@@ -66,7 +67,7 @@ class FlightRecorder:
             self._n_dumps += 1
             n = self._n_dumps
         if path is None:
-            d = os.environ.get("REPRO_OBS_DIR", ".")
+            d = os.environ.get("REPRO_OBS_DIR", "obs_out")
             try:
                 os.makedirs(d, exist_ok=True)
             except OSError:

@@ -12,7 +12,15 @@ production loop watches:
   from the measured wall, after the calibrator's global scale;
 * pipeline bubble fraction (planned and pipelined);
 * compile-cache hit rate (the NCCL-group-cache analogue);
-* serving TTFT p50/p99, end-to-end latency and queue depth.
+* serving TTFT p50/p99, end-to-end latency and queue depth;
+* the analysis layer (obs/analyze.py, obs/anomaly.py): the per-step
+  time-attribution table (compute/dispatch/bubble/stall), MFU/goodput
+  against the Eq. 2 cost model, the controller's advisory log and the
+  per-worker telemetry-stream summary.
+
+Histogram-backed lines (dispatch wall p50/p99) read the bucketed
+`Histogram.quantile` values straight off the metrics snapshot — no
+raw-sample lists are ever needed.
 
 Sections with no data are omitted, so the same function serves the
 single-process trainer, the controller and the serve router.
@@ -43,11 +51,18 @@ def render_report(history: Optional[List[Dict]] = None,
                   metrics: Optional[Dict] = None,
                   calib: Optional[Dict] = None,
                   serve_records: Optional[Sequence[Dict]] = None,
+                  attribution: Optional[List[Dict]] = None,
+                  mfu: Optional[Dict] = None,
+                  advisories: Optional[Sequence[Dict]] = None,
+                  telemetry: Optional[Dict] = None,
                   title: str = "observability report") -> str:
     """Build the dashboard.  ``metrics`` is a `MetricsRegistry.snapshot()`
     dict (a live registry is accepted too); ``calib`` is
     `OnlineCalibrator.summary()`; ``serve_records`` is a list of request
-    telemetry dicts (`Request.telemetry()` / controller request_log)."""
+    telemetry dicts (`Request.telemetry()` / controller request_log);
+    ``attribution`` / ``mfu`` come from `obs.analyze.attribute_steps` /
+    `obs.analyze.mfu_goodput`; ``advisories`` is the controller's
+    advisory log and ``telemetry`` its `telemetry_summary()`."""
     if metrics is not None and hasattr(metrics, "snapshot"):
         metrics = metrics.snapshot()
     m = metrics or {}
@@ -76,6 +91,43 @@ def render_report(history: Optional[List[Dict]] = None,
         if pbub:
             out.append(_line("pipeline bubble fraction (mean)",
                              f"{np.mean(pbub):8.4f}"))
+    dp50 = m.get("trainer.dispatch_s.p50")
+    if dp50 is not None:
+        out.append(_line("dispatch wall p50 / p99 (hist)",
+                         f"{_fmt_s(dp50)} /"
+                         f"{_fmt_s(m.get('trainer.dispatch_s.p99', 0.0))}"))
+
+    if attribution:
+        out.append("-- time attribution (step x lane) --")
+        out.append(_line("step  lane",
+                         "window    comp%  disp%  bubb%  stall%"))
+        for r in attribution[:24]:
+            w = max(r["window_s"], 1e-12)
+            out.append(_line(
+                f"{r['step']:>4d}  {r['process'][:24]:<24}",
+                f"{_fmt_s(r['window_s'])} "
+                f"{r['compute_s'] / w * 100:6.1f} "
+                f"{r['dispatch_s'] / w * 100:6.1f} "
+                f"{r['bubble_s'] / w * 100:6.1f} "
+                f"{r['stall_s'] / w * 100:6.1f}"))
+        if len(attribution) > 24:
+            out.append(_line("...", f"({len(attribution) - 24} more)"))
+
+    if mfu and mfu.get("n_waves"):
+        out.append("-- MFU / goodput (Eq. 2 priced vs measured) --")
+        if mfu.get("mfu") is not None:
+            out.append(_line("MFU (model-relative, cumulative)",
+                             f"{mfu['mfu'] * 100:7.2f}%"))
+        if mfu.get("goodput") is not None:
+            out.append(_line("goodput (useful / total wall)",
+                             f"{mfu['goodput'] * 100:7.2f}%"))
+        out.append(_line("useful / total",
+                         f"{_fmt_s(mfu['useful_s'])} /"
+                         f"{_fmt_s(mfu['total_s'])}"))
+        if mfu.get("tokens_per_s"):
+            out.append(_line("tokens / s", f"{mfu['tokens_per_s']:10.1f}"))
+        out.append(_line("waves priced / fleet scale",
+                         f"{mfu['n_waves']} / {mfu.get('scale', 0):.4f}"))
 
     gap_mean = m.get("ctrl.wave_gap_s.mean")
     gap_max = m.get("ctrl.wave_gap_s.max")
@@ -90,6 +142,28 @@ def render_report(history: Optional[List[Dict]] = None,
     dropped = m.get("ctrl.telemetry_dropped")
     if dropped:
         out.append(_line("telemetry records DROPPED", str(int(dropped))))
+
+    if advisories:
+        out.append("-- anomaly advisories --")
+        for a in list(advisories)[-8:]:
+            who = f"rank {a['rank']}" if a.get("rank") is not None \
+                else f"worker {a.get('worker')}"
+            out.append(_line(
+                f"[{a['kind']}] step {a.get('step')} {who}",
+                f"sev {a.get('severity', 0):6.1f}  "
+                f"{a.get('detail', '')[:40]}"))
+        if len(advisories) > 8:
+            out.append(_line("...", f"({len(advisories) - 8} earlier)"))
+
+    if telemetry:
+        out.append("-- telemetry stream (per worker) --")
+        for wid, t in sorted(telemetry.items()):
+            alive = "up" if t.get("alive") else "DEAD"
+            out.append(_line(
+                f"worker {wid} [{alive}] ranks {t.get('ranks')}",
+                f"streamed {t.get('streamed', 0):5d}  "
+                f"dropped {t.get('dropped', 0):3d}  "
+                f"last step {t.get('last_step')}"))
 
     if calib:
         out.append("-- cost model (Eq. 2 / Eq. 3) vs measurement --")

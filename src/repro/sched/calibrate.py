@@ -220,6 +220,23 @@ class OnlineCalibrator:
                          fit_length=fit_length)
 
     # ------------------------------------------------------------------
+    def apply_advisory(self, rank: int, slowdown: float) -> None:
+        """Mid-step straggler advisory from the anomaly detector
+        (obs/anomaly.py): pull ``rank``'s speed estimate toward
+        ``1/slowdown`` NOW, without waiting for the step-boundary
+        `ingest` batch.  Same EMA weight as a measured sample, so the
+        authoritative end-of-step telemetry seamlessly refines (or
+        corrects) the advisory's estimate."""
+        if not (0 <= rank < self.hdp) or slowdown <= 0:
+            return
+        target = 1.0 / float(slowdown)
+        self._speed[rank] = (self.ema * self._speed[rank]
+                             + (1 - self.ema) * target)
+        mx = get_metrics()
+        mx.counter("calib.advisories_applied").inc()
+        mx.gauge("calib.speed").set(self.rank_speed())
+
+    # ------------------------------------------------------------------
     def state_dict(self) -> dict:
         """JSON-safe snapshot (checkpoint ``data_state``): an elastic
         restart resumes with warm speeds instead of re-learning stragglers

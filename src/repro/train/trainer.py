@@ -119,7 +119,8 @@ class Trainer:
                                      # true per-rank telemetry; the hook
                                      # stays for single-process tests.
         self.telemetry_fn = None     # ctrl-worker hook: called with
-                                     # (waves, measured, fresh) for every
+                                     # (waves, measured, fresh,
+                                     # wall_s=host wall) for every
                                      # dispatch, regardless of tcfg
                                      # .calibrate — the agent streams it
                                      # to the controller (§6.1)
@@ -252,18 +253,23 @@ class Trainer:
         self._attach_materializer(new_hdp_scheduler)
 
     # ------------------------------------------------------------------
-    def _observe(self, waves, measured, fresh_compile: bool):
+    def _observe(self, waves, measured, fresh_compile: bool,
+                 modeled: bool = False, wall_s: Optional[float] = None):
         """Feed one measured dispatch (a wave, or a pipelined round's
         waves) to the telemetry hook and the local calibrator.
         ``measured`` is the SPMD wall time (float) or a per-rank time
-        vector (the deprecated `wave_time_fn` fake clock can supply it).
-        The telemetry hook (ctrl worker agent) sees EVERY dispatch —
-        compile-pollution filtering is the controller's call via the
-        ``fresh`` flag; the local calibrator keeps skipping fresh
-        compiles itself."""
+        vector (the `wave_time_fn` fault-injection clock supplies one).
+        The telemetry hook (ctrl worker agent) sees EVERY dispatch with
+        the TRUE ``fresh`` flag and the TRUE host wall ``wall_s`` —
+        downstream consumers (anomaly gap cursor, straggler join) must
+        know a compile sits in the cadence and how long the dispatch
+        really blocked, even when ``measured`` itself is a modeled
+        vector.  ``modeled`` times carry no compile pollution, so the
+        local calibrator ingests them on fresh waves too."""
         if self.telemetry_fn is not None:
-            self.telemetry_fn(waves, measured, fresh_compile)
-        if fresh_compile or not self.tcfg.calibrate:
+            self.telemetry_fn(waves, measured, fresh_compile,
+                              wall_s=wall_s)
+        if (fresh_compile and not modeled) or not self.tcfg.calibrate:
             return
         costs = np.zeros(self.sched.hdp)
         for w in waves:
@@ -275,11 +281,24 @@ class Trainer:
             self.calib.observe(costs, seconds=float(measured), **kw)
 
     def _dispatch(self, tr, fn, grads, batch, name: str, idx: int,
-                  composition, fresh: bool):
+                  composition, fresh: bool, waves=None):
         """Run one jitted executable under a span; a fresh cache entry
-        pays its compile inside the nested "compile" span."""
+        pays its compile inside the nested "compile" span.  When tracing
+        is on, the span is stamped with the dispatch's Eq. 2 price —
+        modeled per-rank cost max/sum (`Wave.costs`, seconds) and token
+        count — so exported traces are self-contained inputs for
+        `obs.analyze.mfu_goodput`; disabled tracing skips the pricing
+        entirely (zero-overhead contract)."""
+        extra = {}
+        if tr.enabled and waves:
+            costs = np.sum([np.asarray(w.costs) for w in waves], axis=0)
+            extra = {"cost_max": round(float(costs.max(initial=0.0)), 9),
+                     "cost_sum": round(float(costs.sum()), 9),
+                     "tokens": int(sum(p.length for w in waves
+                                       for slot in w.slots
+                                       for p in slot))}
         with tr.span(name, step=self.step, idx=idx,
-                     composition=composition, fresh=fresh):
+                     composition=composition, fresh=fresh, **extra):
             t_w = self._clock()
             if fresh:
                 with tr.span("compile", step=self.step,
@@ -329,15 +348,18 @@ class Trainer:
                 fn, fresh = self._round_fn(rd.composition, rd.c_mult,
                                            rd.offload_ratio,
                                            len(rd.wave_ids))
+                rd_waves = [plan.waves[i] for i in rd.wave_ids]
                 grads, loss, dt = self._dispatch(
                     tr, fn, grads, batch, "round", i, rd.composition,
-                    fresh)
+                    fresh, waves=rd_waves)
                 losses.append(loss)
                 mx.histogram("trainer.dispatch_s").observe(dt)
-                rd_waves = [plan.waves[i] for i in rd.wave_ids]
+                wall = dt
                 if self.wave_time_fn is not None:
-                    dt, fresh = self.wave_time_fn(rd_waves), False
-                self._observe(rd_waves, dt, fresh)
+                    dt = self.wave_time_fn(rd_waves)
+                self._observe(rd_waves, dt, fresh,
+                              modeled=self.wave_time_fn is not None,
+                              wall_s=wall)
             for _ in round_iter:        # drain the prefetch epilogue so
                 pass                    # producer errors still surface
             sched_stats = pipeline_schedule_stats(
@@ -358,12 +380,15 @@ class Trainer:
                                           lw.offload_ratio)
                 grads, loss, dt = self._dispatch(
                     tr, fn, grads, batch, "wave", i, lw.composition,
-                    fresh)
+                    fresh, waves=[wave])
                 losses.append(loss)
                 mx.histogram("trainer.dispatch_s").observe(dt)
+                wall = dt
                 if self.wave_time_fn is not None:
-                    dt, fresh = self.wave_time_fn(wave), False
-                self._observe([wave], dt, fresh)
+                    dt = self.wave_time_fn(wave)
+                self._observe([wave], dt, fresh,
+                              modeled=self.wave_time_fn is not None,
+                              wall_s=wall)
             for _ in wave_iter:         # drain the prefetch epilogue so
                 pass                    # producer errors still surface
         with tr.span("apply", step=self.step):

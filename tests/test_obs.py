@@ -168,6 +168,31 @@ def test_histogram_quantile_bounds():
     assert h.summary()["count"] == 200
 
 
+def test_histogram_quantile_interpolates():
+    """Within-bucket interpolation: uniform samples filling one log2
+    bucket recover exact percentiles (rank-linear between the edges),
+    and estimates clamp to the observed [min, max]."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    vals = np.linspace(1.0, 2.0, 1000, endpoint=False)  # one bucket [1,2)
+    for v in vals:
+        h.observe(float(v))
+    for q in (0.1, 0.25, 0.5, 0.9):
+        exact = float(np.percentile(vals, q * 100))
+        assert abs(h.quantile(q) - exact) < 0.02, (q, h.quantile(q), exact)
+    assert h.quantile(0.0) >= h.min
+    assert h.quantile(1.0) <= h.max
+    # degenerate distribution answers exactly via the clamp
+    h2 = reg.histogram("const")
+    for _ in range(10):
+        h2.observe(0.125)
+    assert h2.quantile(0.5) == 0.125
+    # snapshot exports the interpolated p50/p99 alongside the summary
+    snap = reg.snapshot()
+    assert abs(snap["lat.p50"] - 1.5) < 0.02
+    assert snap["const.p99"] == 0.125
+
+
 def test_async_planner_thread_writes_metrics():
     """The planner daemon thread and the consumer thread hit the global
     registry concurrently; counts stay exact and reads never throw."""
@@ -356,3 +381,317 @@ def test_report_renders_sections():
                    "serving", "TTFT", "90.00%"):
         assert needle in txt, txt
     assert render_report() == "== observability report ==\n  (no data)"
+
+
+# -- cluster analytics: trace merge / attribution / MFU ------------------
+def _span(tr, name, t0, t1, **args):
+    tr.complete(name, t0, t1, tid=1, **args)
+
+
+def test_merge_traces_skewed_anchors():
+    """Two tracers whose monotonic epochs differ by ~83 minutes (raw ts
+    wildly out of order) merge onto one wall timeline: wall ordering is
+    preserved and the merged doc validates."""
+    from repro.obs.analyze import merge_traces
+    ta = Tracer(enabled=True, process="ctrl", pid=1)
+    tb = Tracer(enabled=True, process="worker", pid=1)   # pid collision
+    base = monotime()
+    _span(ta, "ctrl_step", base, base + 0.10, step=0)
+    _span(tb, "wave", base + 0.02, base + 0.05, step=0, idx=0)
+    # simulate a different monotonic epoch in process B: shift its clock
+    # AND its anchor together, so wall times are unchanged
+    skew_us = 5000.0 * 1e6
+    tb._anchor_mono += 5000.0
+    for e in tb._events:
+        e["ts"] += skew_us
+    da, db = ta.to_chrome(), tb.to_chrome()
+    assert db["traceEvents"][-1]["ts"] > da["traceEvents"][-1]["ts"] + 1e9
+    merged = merge_traces([da, db])
+    ok, problems = validate_chrome_trace(
+        merged, require_names=("ctrl_step", "wave"))
+    assert ok, problems
+    xs = {e["name"]: e for e in merged["traceEvents"] if e["ph"] == "X"}
+    # wall order restored: the wave starts 20ms into ctrl_step
+    assert xs["ctrl_step"]["ts"] == pytest.approx(0.0, abs=1.0)
+    assert xs["wave"]["ts"] == pytest.approx(0.02 * 1e6, abs=2e3)
+    # the pid collision was remapped to distinct lanes
+    assert xs["ctrl_step"]["pid"] != xs["wave"]["pid"]
+    assert merged["otherData"]["merged_from"] == 2
+
+
+def test_attribution_sums_to_window():
+    """compute + dispatch + bubble + stall == step window, with nested
+    compiles moved out of compute and the controller's ctrl_step
+    wrapper peeled."""
+    from repro.obs.analyze import attribute_steps
+    tr = Tracer(enabled=True, process="worker", pid=3)
+    b = monotime()
+    _span(tr, "plan", b + 0.00, b + 0.10, step=0)
+    _span(tr, "materialize", b + 0.10, b + 0.15, step=0)
+    _span(tr, "wave", b + 0.15, b + 0.45, step=0, idx=0)
+    _span(tr, "compile", b + 0.20, b + 0.40, step=0)    # nested in wave
+    # [0.45, 0.55] uncovered between waves -> bubble
+    _span(tr, "wave", b + 0.55, b + 0.85, step=0, idx=1)
+    _span(tr, "apply", b + 0.85, b + 0.95, step=0)
+
+    tc = Tracer(enabled=True, process="controller", pid=9)
+    _span(tc, "ctrl_step", b + 0.00, b + 1.00, step=0)  # wrapper
+    _span(tc, "plan", b + 0.10, b + 0.30, step=0)
+
+    from repro.obs.analyze import merge_traces
+    recs = attribute_steps(merge_traces([tr.to_chrome(), tc.to_chrome()]))
+    by_proc = {r["process"]: r for r in recs}
+    w = by_proc["worker"]
+    assert w["window_s"] == pytest.approx(0.95, rel=1e-3)
+    assert w["compute_s"] == pytest.approx(0.40, rel=1e-3)  # waves - compile
+    assert w["stall_s"] == pytest.approx(0.20, rel=1e-3)    # the compile
+    assert w["dispatch_s"] == pytest.approx(0.25, rel=1e-3)
+    assert w["bubble_s"] == pytest.approx(0.10, rel=1e-3)
+    assert w["n_waves"] == 2
+    c = by_proc["controller"]
+    assert c["window_s"] == pytest.approx(1.00, rel=1e-3)   # wrapper peeled
+    assert c["dispatch_s"] == pytest.approx(0.20, rel=1e-3)
+    for r in recs:
+        assert abs(r["check"] - 1.0) < 1e-6, r
+
+
+def test_mfu_goodput_prices_waves():
+    from repro.obs.analyze import mfu_goodput
+    tr = Tracer(enabled=True, process="worker", pid=3)
+    b = monotime()
+    kw = dict(cost_max=0.5, cost_sum=1.6, tokens=100,
+              composition=[1, 1, 1, 1], fresh=False)
+    _span(tr, "wave", b + 0.0, b + 1.0, step=0, idx=0, **kw)
+    _span(tr, "wave", b + 1.2, b + 2.2, step=0, idx=1, **kw)
+    out = mfu_goodput(tr.to_chrome())
+    assert out["n_waves"] == 2
+    assert out["scale"] == pytest.approx(2.0, rel=1e-3)  # wall/cost_max
+    # useful = 2 x 1.6 x 2.0 = 6.4 fleet-s over hdp(4) x window(2.2)
+    assert out["mfu"] == pytest.approx(6.4 / (4 * 2.2), abs=2e-3)
+    assert out["goodput"] == pytest.approx(1.0, abs=1e-6)
+    assert out["tokens"] == 200
+    assert out["per_step"][0]["waves"] == 2
+    # empty trace degrades explicitly
+    empty = Tracer(enabled=True, process="x", pid=1)
+    _span(empty, "plan", b, b + 0.1, step=0)
+    assert mfu_goodput(empty.to_chrome())["n_waves"] == 0
+
+
+def test_analyze_cli_merges_and_reports(tmp_path, capsys):
+    from repro.obs.analyze import main as analyze_main
+    b = monotime()
+    ta = Tracer(enabled=True, process="controller", pid=1)
+    _span(ta, "ctrl_step", b, b + 0.2, step=0)
+    tb = Tracer(enabled=True, process="worker", pid=1)
+    _span(tb, "wave", b + 0.01, b + 0.15, step=0, idx=0,
+          cost_max=0.1, cost_sum=0.3, tokens=64,
+          composition=[1, 1, 1, 1], fresh=False)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    ta.to_chrome(str(p1))
+    tb.to_chrome(str(p2))
+    out_path = tmp_path / "merged.json"
+    rc = analyze_main([str(p1), str(p2), "--out", str(out_path),
+                       "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["valid"] is True
+    assert doc["mfu"]["n_waves"] == 1
+    assert {r["process"] for r in doc["attribution"]} == \
+        {"controller", "worker"}
+    merged = json.loads(out_path.read_text())
+    assert merged["otherData"]["merged_from"] == 2
+
+
+# -- online anomaly detection -------------------------------------------
+def _wave_rec(ranks, times, step, fresh=False, t_mono=None):
+    return {"ranks": list(ranks), "times": list(times), "exact": True,
+            "fresh": fresh,
+            "t_mono": monotime() if t_mono is None else t_mono,
+            "t_wall": time.time(), "step": step}
+
+
+def test_anomaly_clean_stream_is_silent():
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    rng = np.random.RandomState(0)
+    advs = []
+    for step in range(3):
+        for _ in range(4):
+            t = 0.1 * (1.0 + 0.03 * rng.randn(4))
+            advs += det.ingest_wave(0, _wave_rec([0, 1], t[:2], step))
+            advs += det.ingest_wave(1, _wave_rec([2, 3], t[2:], step))
+    assert advs == []
+    s = det.summary()
+    assert s["waves_seen"] == 12
+    assert s["advisories"] == {}
+    assert all(abs(r - 1.0) < 0.2 for r in s["rank_ratio_ewma"])
+
+
+def test_anomaly_straggler_fires_bounded_and_cools_down():
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    advs = []
+    for i in range(10):
+        t = [0.1, 0.3, 0.1, 0.1]       # rank 1 runs 3x slow
+        advs += det.ingest_wave(0, _wave_rec([0, 1], t[:2], 0))
+        advs += det.ingest_wave(1, _wave_rec([2, 3], t[2:], 0))
+    strag = [a for a in advs if a.kind == "straggler"]
+    assert strag, "3x straggler must be detected"
+    a = strag[0]
+    assert a.rank == 1
+    assert a.slowdown == pytest.approx(3.0, rel=0.1)
+    assert a.waves_seen <= 5            # detection latency in waves
+    assert a.severity >= det.cfg.z_thresh
+    # cooldown: 10 waves < cooldown_waves -> exactly one advisory
+    assert len(strag) == 1
+
+
+def test_anomaly_fresh_records_are_ignored():
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    advs = []
+    for _ in range(8):
+        advs += det.ingest_wave(0, _wave_rec([0, 1], [0.1, 9.9], 0,
+                                             fresh=True))
+        advs += det.ingest_wave(1, _wave_rec([2, 3], [0.1, 0.1], 0,
+                                             fresh=True))
+    assert advs == []
+    assert det.summary()["waves_seen"] == 0
+
+
+def test_anomaly_partial_joins_never_finalize():
+    """One worker's records alone (ranks 0..1 of hdp=4) must not fake a
+    fleet wave — medians over half the ranks double-count dispatches."""
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    for step in range(8):
+        det.ingest_wave(0, _wave_rec([0, 1], [0.1, 0.9], step))
+    s = det.summary()
+    assert s["waves_seen"] == 0
+    assert s["pending_joins"] <= det.cfg.max_pending_steps + 1
+
+
+def test_anomaly_wave_gap_and_heartbeat():
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    t0 = 100.0
+    advs = []
+    for i in range(6):                  # steady 0.2s dispatch cadence
+        advs += det.ingest_wave(0, _wave_rec([0, 1], [0.1, 0.1], 0,
+                                             t_mono=t0 + 0.2 * i))
+    assert advs == []
+    advs = det.ingest_wave(0, _wave_rec([0, 1], [0.1, 0.1], 0,
+                                        t_mono=t0 + 0.2 * 5 + 5.0))
+    assert [a.kind for a in advs] == ["wave_gap"]
+    assert advs[0].worker == 0
+    # value is the dispatch IDLE: the 5.0s gap minus the arriving
+    # wave's own 0.1s wall — a long wave alone must not trip this
+    assert advs[0].value == pytest.approx(4.9, rel=1e-6)
+
+    # heartbeat silence: cadence 0.05s, then a 2s hole
+    hb = []
+    for i in range(5):
+        hb += det.ingest_heartbeat(1, t0 + 0.05 * i, 0.05)
+    assert hb == []
+    hb = det.ingest_heartbeat(1, t0 + 0.05 * 4 + 2.0, 0.05)
+    assert [a.kind for a in hb] == ["heartbeat"]
+    assert hb[0].severity > det.cfg.hb_factor
+
+
+def test_anomaly_long_warm_wave_is_not_a_gap():
+    # HDP wave walls legitimately vary with composition: a warm packed
+    # [4] wave costs ~4x a [1,1,1,1] wave.  The cadence jump it causes
+    # is compute, not a dispatch stall — the detector subtracts the
+    # arriving wave's own wall, so this must stay silent.
+    from repro.obs.anomaly import AnomalyDetector
+    det = AnomalyDetector(4)
+    t, advs = 100.0, []
+    for i in range(6):                  # short waves: 0.5s wall, 0.6s gap
+        t += 0.6
+        advs += det.ingest_wave(0, _wave_rec([0, 1], [0.5, 0.5], 0,
+                                             t_mono=t))
+    t += 12.5                           # packed wave: 12.4s of compute
+    advs += det.ingest_wave(0, _wave_rec([0, 1], [12.4, 12.4], 0,
+                                         t_mono=t))
+    assert advs == []
+    t += 12.4                           # idle 12.3s >> walls: DOES fire
+    advs += det.ingest_wave(0, _wave_rec([0, 1], [0.1, 0.1], 0,
+                                         t_mono=t))
+    assert [a.kind for a in advs] == ["wave_gap"]
+
+
+def test_advisory_shifts_scheduler_mid_step(tmp_path, monkeypatch):
+    """The full controller-side loop, no cluster: streamed frames from
+    two (fake) worker handles drive the detector, the straggler advisory
+    applies to the calibrator and `SchedulerService.rank_speed` BEFORE
+    any step_done calibration ran."""
+    import types
+    monkeypatch.setenv("REPRO_OBS_DIR", str(tmp_path))  # severe advisory
+    ctl = _mk_controller(num_workers=2, steps=1)        # may dump
+    try:
+        h0 = types.SimpleNamespace(wid=0)
+        h1 = types.SimpleNamespace(wid=1)
+        assert ctl.service.rank_speed is None      # nothing calibrated yet
+        for _ in range(6):
+            ctl._on_worker_frame(h0, {"telemetry": [
+                _wave_rec([0, 1], [0.1, 0.3], 0)]})
+            ctl._on_worker_frame(h1, {"telemetry": [
+                _wave_rec([2, 3], [0.1, 0.1], 0)]})
+        strag = [a for a in ctl.advisories if a["kind"] == "straggler"]
+        assert strag and strag[0]["rank"] == 1
+        assert strag[0]["applied"] is True
+        sp = strag[0]["rank_speed_after"]
+        assert sp[1] < min(s for i, s in enumerate(sp) if i != 1)
+        # the service consumes the advisory speeds for future planning
+        speed = ctl.service.rank_speed
+        assert speed is not None
+        assert speed[1] < min(np.delete(np.asarray(speed), 1))
+        snap = get_metrics().snapshot()
+        assert snap.get("anomaly.advisories", 0) >= 1
+        assert snap.get("anomaly.straggler", 0) >= 1
+        assert snap.get("calib.advisories_applied", 0) >= 1
+        # the severe advisory (z >> anomaly_dump_z) triggered a bounded
+        # flight-recorder dump, and the ring logged the advisory record
+        dumps = glob.glob(str(tmp_path / "flightrec_advisory_*.json"))
+        assert dumps, "severe advisory must dump a flight record"
+        doc = json.loads(open(dumps[0]).read())
+        advs = [e for e in doc["events"] if e["kind"] == "advisory"]
+        assert advs and advs[0]["advisory_kind"] == "straggler"
+        assert advs[0]["rank_speed_after"][1] < 1.0
+    finally:
+        ctl.stop()
+
+
+def test_anomaly_detection_disabled_is_inert():
+    import types
+    ctl = _mk_controller(num_workers=2, steps=1, anomaly_detect=False)
+    try:
+        assert ctl.anomaly is None
+        ctl._on_worker_frame(types.SimpleNamespace(wid=0), {
+            "telemetry": [_wave_rec([0, 1], [0.1, 9.9], 0)]})
+        assert ctl.advisories == []
+    finally:
+        ctl.stop()
+
+
+def test_controller_telemetry_summary():
+    ctl = _mk_controller(num_workers=2, steps=2)
+    addr = ctl.serve()
+    threads = [threading.Thread(target=_stub_worker, args=(addr,),
+                                daemon=True) for _ in range(2)]
+    for t in threads:
+        t.start()
+    ctl.wait_for_workers()
+    hist = ctl.run()
+    assert hist[-1]["step"] == 2
+    ts = ctl.telemetry_summary()
+    assert sorted(ts) == [0, 1]
+    owned = sorted(r for w in ts.values() for r in w["ranks"])
+    assert owned == [0, 1, 2, 3]
+    for w in ts.values():
+        for key in ("alive", "streamed", "buffered", "dropped",
+                    "last_step", "progress"):
+            assert key in w
+        assert w["dropped"] == 0
+    for t in threads:
+        t.join(timeout=10.0)
