@@ -19,9 +19,11 @@ def run():
         t0 = time.perf_counter()
         r_max = OF.max_overlap_ratio(coeffs, s, hw)
         r, d = OF.solve_eq3(coeffs, s, 8192, cfg.num_layers, hw)
+        d2h, h2d = OF.eq3_bytes(coeffs, s, r, cfg.num_layers, hw)
         us = (time.perf_counter() - t0) * 1e6
         mem_saved = r * (cfg.num_layers - 2) / cfg.num_layers
         rows.append((f"fig21.ctx{s//1024}K", us,
                      f"free_ratio={min(r_max,1.0):.2f} eq3_r={r:.2f} "
-                     f"D={d} mem_saved_frac={mem_saved:.2f}"))
+                     f"D={d} mem_saved_frac={mem_saved:.2f} "
+                     f"d2h_gb={d2h/1e9:.1f} h2d_gb={h2d/1e9:.1f}"))
     return rows

@@ -13,9 +13,12 @@ interpret vs jnp oracle; see benchmarks/kernel_bench.py) — and
 ``BENCH_serve.json`` — the serving snapshot (continuous vs static
 admission on a Poisson bimodal mix: latency p50/p99, tok/s, makespan;
 see benchmarks/serve_bench.py) — and ``BENCH_obs.json`` — the
-observability snapshot (tracing overhead vs an untraced step, 8-device
-Chrome-trace validity; see benchmarks/obs_bench.py) — so the repo's
-perf trajectory is recorded in-tree.
+observability snapshot (tracing + bytes-ledger overhead vs an untraced
+step, 8-device Chrome-trace validity; see benchmarks/obs_bench.py) —
+and ``BENCH_comm.json`` — the comm-bytes snapshot (HDP vs static-CP
+total comm priced by the bytes ledger, plus the instrumented
+predicted-vs-measured residual; see benchmarks/comm_bench.py) — so the
+repo's perf trajectory is recorded in-tree.
 """
 from __future__ import annotations
 
@@ -145,6 +148,14 @@ def main() -> None:
     except Exception as e:
         rows.append(("benchmarks.obs_bench.ERROR", 0.0, repr(e)[:120]))
         sys.stderr.write(f"[obs_snapshot] FAILED: {e!r}\n")
+    try:
+        from benchmarks import comm_bench
+        rows.extend(comm_bench.run())
+        sys.stderr.write(
+            f"[comm_snapshot] -> {comm_bench.SNAPSHOT_PATH}\n")
+    except Exception as e:
+        rows.append(("benchmarks.comm_bench.ERROR", 0.0, repr(e)[:120]))
+        sys.stderr.write(f"[comm_snapshot] FAILED: {e!r}\n")
     t0 = time.perf_counter()
     try:
         rows.extend(kernels_snapshot())

@@ -185,6 +185,22 @@ def offload_supported() -> bool:
     return host_offload_memory_kind() is not None
 
 
+def device_memory_stats(device=None) -> dict:
+    """``device.memory_stats()`` with graceful degradation: backends that
+    expose no allocator stats (CPU, some TPU runtimes return None or
+    raise) yield ``{}`` instead of crashing — the bytes ledger's measured
+    HBM watermark simply stays absent there (obs/ledger.py).
+
+    Initializes the backend when ``device`` is None — call lazily, never
+    at import time (same discipline as `memory_kinds`)."""
+    try:
+        d = device if device is not None else jax.local_devices()[0]
+        stats = d.memory_stats()
+        return dict(stats) if stats else {}
+    except Exception:
+        return {}
+
+
 def offload_policy(names: Sequence[str] = ("resid",)):
     """Remat policy offloading ``names`` to host memory (ByteScale Eq. 3's
     execution side).  Degrades to saving the same names on device when the
@@ -211,6 +227,8 @@ _FEATURES = {
     "set_mesh": lambda: (True, "legacy mesh context substitutes on 0.4.x"),
     "host_offload": lambda: (offload_supported(),
                              "no pinned_host memory on this backend"),
+    "memory_stats": lambda: (bool(device_memory_stats()),
+                             "backend exposes no allocator stats"),
 }
 
 

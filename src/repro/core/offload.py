@@ -118,6 +118,25 @@ def solve_eq3(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
     return r, max(1, min(d, d_no_offload))
 
 
+def eq3_bytes(cfg_or_coeffs, s: int, r: float, num_layers: int,
+              hw: OffloadHW = OffloadHW(), quadratic: bool = True):
+    """(d2h, h2d) byte totals Eq. 3 moves for one sequence of length s at
+    offload ratio r — the arithmetic `solve_eq3` prices internally (the
+    ``r·(l-2)·Act(s)`` term its D(s) numerator subtracts): the first and
+    last layers never offload, every other layer ships ``r`` of its
+    activations out and back.  Shared by the bytes ledger and
+    benchmarks/offload_sweep.py so neither re-derives the formula."""
+    if r <= 0:
+        return 0.0, 0.0
+    c = cfg_or_coeffs if isinstance(cfg_or_coeffs, CostCoeffs) \
+        else analytic_coeffs(cfg_or_coeffs, hw)
+    if not quadratic:
+        c = CostCoeffs(a1=0.0, b1=c.b1, g=c.g, a2=c.a2, b2=c.b2)
+    ell = max(num_layers, 3)
+    moved = float(r) * (ell - 2) * act_bytes(c, s)
+    return moved, moved
+
+
 def ratio_for_d(cfg_or_coeffs, s: int, capacity: int, num_layers: int,
                 d: int, hw: OffloadHW = OffloadHW(),
                 quadratic: bool = True):

@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import attention as att
+from repro.obs import ledger
 
 AxisNames = Tuple[str, ...]
 
@@ -158,6 +159,12 @@ def _ring_attention_local(q, kv, q_seg, k_seg, q_pos, k_pos, *,
         return att.finalize_stats(*stats, q.dtype).reshape(c, -1, dv)
 
     k_meta = _block_meta(k_seg, k_pos)
+
+    if ledger.tally_active():
+        # bytes ledger: the carried block tree rotates once per ring step
+        # over len(perm) edges — fleet bytes are static at trace time
+        ledger.record_comm("ring", steps * len(perm) * ledger.tree_bytes(
+            (kv, k_seg, k_pos, k_meta)))
 
     def body(carry, s):
         blk, stats = carry

@@ -48,6 +48,7 @@ from repro.ctrl import elastic
 from repro.ctrl.rpc import Channel, Listener
 from repro.data.loader import WaveMaterializer
 from repro.obs import get_metrics, get_recorder, get_tracer
+from repro.obs import ledger as ledger_mod
 from repro.obs.anomaly import AnomalyConfig, AnomalyDetector
 from repro.parallel.pipeline import pipeline_rounds, rounds_splitter
 from repro.sched.calibrate import OnlineCalibrator, fit_length_of
@@ -257,6 +258,9 @@ class Controller:
         self.advisories: List[Dict] = []    # anomaly advisory log (survives
         self._adv_lock = threading.Lock()   # elastic re-geometry)
         self._adv_dumps = 0
+        self.fleet_ledger = ledger_mod.new_totals()  # bytes-ledger records
+                                            # off the telemetry wire, folded
+                                            # across steps (and re-geometry)
         self._make_service(spec)
 
     # -- wiring --------------------------------------------------------
@@ -493,6 +497,13 @@ class Controller:
                 else [plan.waves[i]]
             costs = np.sum([np.asarray(w.costs) for w in waves_i], axis=0)
             recs = [m["telemetry"][i] for m in dones.values()]
+            # fleet bytes ledger: every worker's SPMD dispatch carries the
+            # same fleet-total byte record — fold exactly ONE copy per
+            # dispatch (summing all workers' copies would multiply-count)
+            led = next((r["ledger"] for r in recs if r.get("ledger")),
+                       None)
+            if led is not None:
+                ledger_mod.merge_record(self.fleet_ledger, led)
             parts = [(r["ranks"], r["times"]) for r in recs]
             fresh = any(r["fresh"] for r in recs)
             exact = all(r.get("exact", False) for r in recs)
@@ -568,6 +579,12 @@ class Controller:
                         and self._adv_dumps < self.ccfg.anomaly_dumps:
                     self._adv_dumps += 1
                     get_recorder().dump(f"advisory_{a.kind}")
+
+    def ledger_summary(self) -> Dict:
+        """Residual view of the fleet bytes ledger folded off the
+        telemetry wire (`obs.ledger.totals_summary`) — the cluster-wide
+        predicted-vs-measured comm audit for reports and gates."""
+        return ledger_mod.totals_summary(self.fleet_ledger)
 
     def telemetry_summary(self) -> Dict[int, Dict]:
         """Per-worker view of the streamed-telemetry deques — wave

@@ -352,6 +352,12 @@ class WorkerAgent:
             self.ranks, measured, fresh,
             step=self.trainer.step if self.trainer is not None else None,
             wall_s=wall_s)
+        if self.trainer is not None \
+                and self.trainer.last_ledger_record is not None:
+            # bytes ledger (obs/ledger.py): the dispatch's predicted/
+            # measured byte record rides the same wire frames, so the
+            # controller folds a fleet ledger out of heartbeats
+            rec["ledger"] = self.trainer.last_ledger_record
         self._telemetry.append(rec)
         with self._stream_lock:
             self._stream_pending.append(rec)

@@ -104,7 +104,10 @@ def make_ring_flash(cfg):
         return out
 
     def _rf_fwd(q, kv, q_seg, k_seg, q_pos, k_pos, kgi):
-        return RF.ring_flash_fwd(cfg, q, kv, q_seg, k_seg, q_pos, k_pos, kgi)
+        # record=False: under grad both the primal above and this rule
+        # trace — only the primal lands the bytes-ledger comm record
+        return RF.ring_flash_fwd(cfg, q, kv, q_seg, k_seg, q_pos, k_pos,
+                                 kgi, record=False)
 
     def _rf_bwd(res, do):
         dq, dkv = RF.ring_flash_bwd(cfg, res, do)

@@ -51,6 +51,7 @@ from repro.core import attention as att
 from repro.core.ring import (_block_meta, _block_relevant, composition_tables,
                              ring_perm)
 from repro.kernels import flash_attention as FA
+from repro.obs import ledger
 
 NEG_INF = FA.NEG_INF
 
@@ -183,9 +184,15 @@ def _liveness(cfg: RingConfig, q_seg, q_pos):
     return live
 
 
-def ring_flash_fwd(cfg: RingConfig, q, kv, q_seg, k_seg, q_pos, k_pos, kgi):
+def ring_flash_fwd(cfg: RingConfig, q, kv, q_seg, k_seg, q_pos, k_pos, kgi,
+                   record: bool = True):
     """Forward ring.  Local shapes: q [C, hpl, D]; kv [C, G_kv, Dk(+Dv)];
-    metadata [C].  Returns (out [C, hpl, Dv], residuals)."""
+    metadata [C].  Returns (out [C, hpl, Dv], residuals).
+
+    ``record=False`` suppresses the bytes-ledger comm record: under
+    differentiation the custom_vjp machinery traces BOTH the primal and
+    the fwd rule (each calling this function), so only the primal call
+    records (kernels/ops.py passes record=False from the fwd rule)."""
     dk, v_off, dv = cfg.kv_split
     g_kv = kv.shape[1]
     qt = _to_kernel_q(cfg, q, g_kv)                      # [G, Hg, C, D]
@@ -220,7 +227,14 @@ def ring_flash_fwd(cfg: RingConfig, q, kv, q_seg, k_seg, q_pos, k_pos, kgi):
         # overlaps the collective with compute (double buffering); the same
         # holds inside the loop, and the final step is peeled so no dead
         # rotation is issued.
-        blk = rot((kv, k_seg, k_pos, _block_meta(k_seg, k_pos)))
+        blk_tree = (kv, k_seg, k_pos, _block_meta(k_seg, k_pos))
+        if record and ledger.tally_active():
+            # bytes ledger: `steps` forward rotations in total (pre-loop +
+            # scan/unroll + peeled final), same carried tree as the oracle
+            # ring — forward-trace accounting only, matching obs/ledger.py
+            ledger.record_comm("ring", steps * len(cfg.perm)
+                               * ledger.tree_bytes(blk_tree))
+        blk = rot(blk_tree)
         if cfg.unroll:
             for s in range(1, steps):
                 nxt = rot(blk)

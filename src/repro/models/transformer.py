@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import offload_policy, shard_map
 from repro.configs.base import ModelConfig
 from repro.core import ring as R
+from repro.obs import ledger
 from repro.models import layers as L
 from repro.models import mamba as MB
 from repro.models import mla as MLA
@@ -409,11 +410,21 @@ def apply_periods(blocks, cfg: ModelConfig, rt: Runtime, x, seg, pos):
             for i in range(n):
                 x, _ = body(x, jax.tree.map(lambda a: a[i], stacked))
             return x
-        x, _ = jax.lax.scan(body, x, stacked)
+        # bytes ledger: the scan body traces once but executes once per
+        # stacked period — scale trace-time comm records accordingly
+        with ledger.comm_scale(jax.tree.leaves(stacked)[0].shape[0]):
+            x, _ = jax.lax.scan(body, x, stacked)
         return x
 
     if rt.remat == "offload" and 0 < rt.offload_periods:
         k = min(rt.offload_periods, n_periods)
+        if ledger.tally_active():
+            # bytes ledger: each offloaded period ships its "resid" entry
+            # ([T, d_model]) to host in the forward and back in the
+            # backward — the execution-quantized side of Eq. 3's ratio
+            moved = k * ledger.tree_bytes(x)
+            ledger.record_comm("offload_d2h", moved)
+            ledger.record_comm("offload_h2d", moved)
         head_stack, tail_stack = _split_stacked(blocks, k)
         x = run_scan(x, head_stack, _offload_policy())
         if k < n_periods:

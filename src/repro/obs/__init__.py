@@ -28,8 +28,10 @@ from __future__ import annotations
 
 from typing import Optional
 
-from repro.obs.analyze import attribute_steps, merge_traces, mfu_goodput
+from repro.obs.analyze import (attribute_steps, comm_summary, merge_traces,
+                               mfu_goodput)
 from repro.obs.anomaly import Advisory, AnomalyConfig, AnomalyDetector
+from repro.obs.ledger import Ledger, ledger_enabled, set_ledger_enabled
 from repro.obs.metrics import MetricsRegistry, get_metrics
 from repro.obs.recorder import FlightRecorder, get_recorder
 from repro.obs.report import render_report
@@ -37,23 +39,27 @@ from repro.obs.trace import (Tracer, get_tracer, monotime, set_tracer,
                              validate_chrome_trace)
 
 __all__ = [
-    "MetricsRegistry", "FlightRecorder", "Tracer",
+    "MetricsRegistry", "FlightRecorder", "Tracer", "Ledger",
     "Advisory", "AnomalyConfig", "AnomalyDetector",
     "get_metrics", "get_recorder", "get_tracer", "set_tracer",
     "monotime", "render_report", "validate_chrome_trace", "configure",
-    "merge_traces", "attribute_steps", "mfu_goodput",
+    "merge_traces", "attribute_steps", "mfu_goodput", "comm_summary",
+    "ledger_enabled", "set_ledger_enabled",
 ]
 
 
 def configure(trace: Optional[bool] = None,
               trace_process: Optional[str] = None,
               trace_pid: Optional[int] = None,
-              metrics_path: Optional[str] = None) -> None:
+              metrics_path: Optional[str] = None,
+              ledger: Optional[bool] = None) -> None:
     """Adjust the process-global observability state in one call; every
     argument left ``None`` keeps its current setting."""
     t = get_tracer()
     if trace is not None:
         t.enabled = bool(trace)
+    if ledger is not None:
+        set_ledger_enabled(ledger)
     if trace_process is not None:
         t.process = trace_process
         t.set_process_name(t.pid if trace_pid is None else int(trace_pid),

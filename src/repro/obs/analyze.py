@@ -354,6 +354,53 @@ def mfu_goodput(doc: dict,
 
 
 # ---------------------------------------------------------------------------
+# comm / memory (bytes-ledger stamps)
+# ---------------------------------------------------------------------------
+
+def comm_summary(doc: dict) -> dict:
+    """Aggregate the bytes-ledger stamps off wave/round spans
+    (``args.bytes_pred`` / ``args.bytes_meas`` — `obs.ledger` records the
+    trainer lands per dispatch) into the predicted-vs-measured comm
+    audit: per-kind fleet byte totals, relative residuals, and per-step
+    totals.  Waves are SPMD — every worker lane stamps the same fleet
+    record — so one lane per (step, idx) counts, final occurrence wins
+    (elastic replays overwrite)."""
+    from repro.obs import ledger
+
+    spans: Dict[Tuple[int, int], dict] = {}
+    for e in doc.get("traceEvents", []):
+        a = e.get("args") or {}
+        if e.get("ph") != "X" or e["name"] not in COMPUTE_SPANS \
+                or "bytes_pred" not in a:
+            continue
+        key = (int(a.get("step", -1)), int(a.get("idx", 0)))
+        prev = spans.get(key)
+        if prev is None or float(e["ts"]) > prev["ts"]:
+            spans[key] = {"ts": float(e["ts"]),
+                          "pred": a["bytes_pred"],
+                          "meas": a.get("bytes_meas")}
+    if not spans:
+        return {"n_dispatch": 0}
+    totals = ledger.new_totals()
+    by_step: Dict[int, Dict[str, float]] = {}
+    for (step, _), s in spans.items():
+        rec = {"pred": s["pred"]}
+        if s["meas"]:
+            rec["meas"] = s["meas"]
+        ledger.merge_record(totals, rec)
+        agg = by_step.setdefault(step, {"pred": 0.0, "meas": 0.0})
+        agg["pred"] += sum(float(v) for v in s["pred"].values())
+        if s["meas"]:
+            agg["meas"] += sum(float(v) for v in s["meas"].values())
+    out = ledger.totals_summary(totals)
+    out["n_dispatch"] = out.pop("n")
+    out["per_step"] = [{"step": s, "pred_bytes": round(v["pred"]),
+                        "meas_bytes": round(v["meas"])}
+                       for s, v in sorted(by_step.items())]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -380,26 +427,33 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write the merged Chrome trace here")
     ap.add_argument("--json", action="store_true",
                     help="machine-readable summary instead of the report")
+    ap.add_argument("--comm", action="store_true",
+                    help="include the bytes-ledger comm/memory audit "
+                         "(predicted vs measured bytes per collective "
+                         "kind, off the wave spans' ledger stamps)")
     args = ap.parse_args(argv)
 
     merged = merge_traces(args.traces)
     ok, problems = validate_chrome_trace(merged)
     attribution = attribute_steps(merged)
     mfu = mfu_goodput(merged, attribution)
+    comm = comm_summary(merged) if args.comm else None
     if args.out:
         with open(args.out, "w") as f:
             json.dump(merged, f)
             f.write("\n")
     metrics = _load_metrics_jsonl(args.metrics) if args.metrics else None
     if args.json:
-        print(json.dumps({"valid": ok, "problems": problems[:8],
-                          "n_events": len(merged["traceEvents"]),
-                          "attribution": attribution, "mfu": mfu},
-                         indent=1, sort_keys=True))
+        out = {"valid": ok, "problems": problems[:8],
+               "n_events": len(merged["traceEvents"]),
+               "attribution": attribution, "mfu": mfu}
+        if comm is not None:
+            out["comm"] = comm
+        print(json.dumps(out, indent=1, sort_keys=True))
     else:
         from repro.obs.report import render_report
         print(render_report(metrics=metrics, attribution=attribution,
-                            mfu=mfu, title="cluster analysis "
+                            mfu=mfu, comm=comm, title="cluster analysis "
                             f"({len(args.traces)} trace(s), "
                             f"valid={ok})"))
         if not ok:

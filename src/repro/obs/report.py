@@ -38,6 +38,14 @@ def _fmt_s(v: float) -> str:
     return f"{v * 1e3:8.3f}ms"
 
 
+def _fmt_b(v: float) -> str:
+    for unit in ("B ", "KB", "MB", "GB"):
+        if abs(v) < 1024.0:
+            return f"{v:9.2f}{unit}"
+        v /= 1024.0
+    return f"{v:9.2f}TB"
+
+
 def _pct(q, xs):
     return float(np.percentile(np.asarray(xs, float), q)) if len(xs) \
         else 0.0
@@ -55,6 +63,7 @@ def render_report(history: Optional[List[Dict]] = None,
                   mfu: Optional[Dict] = None,
                   advisories: Optional[Sequence[Dict]] = None,
                   telemetry: Optional[Dict] = None,
+                  comm: Optional[Dict] = None,
                   title: str = "observability report") -> str:
     """Build the dashboard.  ``metrics`` is a `MetricsRegistry.snapshot()`
     dict (a live registry is accepted too); ``calib`` is
@@ -62,7 +71,9 @@ def render_report(history: Optional[List[Dict]] = None,
     telemetry dicts (`Request.telemetry()` / controller request_log);
     ``attribution`` / ``mfu`` come from `obs.analyze.attribute_steps` /
     `obs.analyze.mfu_goodput`; ``advisories`` is the controller's
-    advisory log and ``telemetry`` its `telemetry_summary()`."""
+    advisory log and ``telemetry`` its `telemetry_summary()`; ``comm``
+    is the bytes-ledger audit (`obs.analyze.comm_summary`, or a ledger/
+    controller `summary()`/`ledger_summary()` dict)."""
     if metrics is not None and hasattr(metrics, "snapshot"):
         metrics = metrics.snapshot()
     m = metrics or {}
@@ -129,6 +140,27 @@ def render_report(history: Optional[List[Dict]] = None,
         out.append(_line("waves priced / fleet scale",
                          f"{mfu['n_waves']} / {mfu.get('scale', 0):.4f}"))
 
+    if comm and (comm.get("n_dispatch") or comm.get("n")):
+        out.append("-- comm / memory (bytes ledger: predicted vs "
+                   "measured) --")
+        out.append(_line("dispatches audited",
+                         str(comm.get("n_dispatch", comm.get("n")))))
+        out.append(_line("predicted / measured comm total",
+                         f"{_fmt_b(comm.get('pred_total', 0.0))} /"
+                         f"{_fmt_b(comm.get('meas_total', 0.0))}"))
+        if comm.get("comm_residual") is not None:
+            out.append(_line("comm residual |pred-meas|/max",
+                             f"{comm['comm_residual'] * 100:7.2f}%"))
+        for kind, resid in sorted((comm.get("residual") or {}).items()):
+            out.append(_line(f"  residual [{kind}]",
+                             f"{resid * 100:7.2f}%"))
+        if comm.get("hbm_pred_peak") or comm.get("hbm_meas_peak"):
+            out.append(_line("HBM peak predicted / sampled",
+                             f"{_fmt_b(comm.get('hbm_pred_peak', 0.0))} /"
+                             f"{_fmt_b(comm.get('hbm_meas_peak', 0.0))}"))
+        for kind, v in sorted((comm.get("step_bytes") or {}).items()):
+            out.append(_line(f"per-step [{kind}]", _fmt_b(float(v))))
+
     gap_mean = m.get("ctrl.wave_gap_s.mean")
     gap_max = m.get("ctrl.wave_gap_s.max")
     if gap_mean is not None:
@@ -177,6 +209,10 @@ def render_report(history: Optional[List[Dict]] = None,
         if sp:
             out.append(_line("rank speed (min / max)",
                              f"{min(sp):6.3f} / {max(sp):6.3f}"))
+        if calib.get("bytes_residual") is not None:
+            out.append(_line("comm bytes residual (ledger EMA)",
+                             f"{calib['bytes_residual'] * 100:7.2f}%  "
+                             f"({calib.get('bytes_n', 0)} dispatches)"))
         if calib.get("n_observed") is not None:
             out.append(_line("observations", str(calib["n_observed"])))
 

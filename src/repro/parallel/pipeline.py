@@ -53,6 +53,7 @@ from repro.core.loss import token_ce_loss
 from repro.models import layers as L
 from repro.models.transformer import (apply_periods, embed_frontend,
                                       head_layer_count)
+from repro.obs import ledger
 from repro.parallel.sharding import Runtime
 
 
@@ -113,12 +114,22 @@ def pipeline_hidden(params, cfg: ModelConfig, rt: Runtime, batch):
 
     feed = {k: pad_drain(batch[k]) for k in feed_keys}
 
-    vstage = jax.vmap(lambda bs, x, sg, ps: apply_periods(bs, cfg, rt, x,
-                                                          sg, ps),
-                      spmd_axis_name=s_axis)
+    def vstage(bs, x, sg, ps):
+        # bytes ledger: the stage vmap traces once but every stage runs
+        # its own period window (and its own rings) each tick
+        with ledger.comm_scale(S):
+            return jax.vmap(
+                lambda b, x_, sg_, ps_: apply_periods(b, cfg, rt, x_,
+                                                      sg_, ps_),
+                spmd_axis_name=s_axis)(bs, x, sg, ps)
 
     def body(carry, mb):
         buf_x, buf_seg, buf_pos = carry
+        if ledger.tally_active():
+            # bytes ledger: the stage roll below is one CollectivePermute
+            # in which every stage ships its buffer slice to its neighbour
+            ledger.record_comm("pp", ledger.tree_bytes(
+                (buf_x, buf_seg, buf_pos)))
         # stage transfer: the wavefront advances one stage.  jnp.roll on
         # the stage-sharded dim lowers to a CollectivePermute between
         # neighbouring stages; row 0's wrap-around value is immediately
@@ -148,7 +159,9 @@ def pipeline_hidden(params, cfg: ModelConfig, rt: Runtime, batch):
         jax.lax.with_sharding_constraint(
             carry0[2], P(s_axis, rt.hdp_axes, None) if pos0.ndim == 3
             else P(s_axis, rt.hdp_axes)))
-    _, outs = jax.lax.scan(body, carry0, feed)
+    # bytes ledger: the tick body traces once, executes M + S - 1 times
+    with ledger.comm_scale(M + S - 1):
+        _, outs = jax.lax.scan(body, carry0, feed)
     hidden = outs[S - 1:]                                # microbatches 0..M-1
     return L.rmsnorm(params["final_norm"], hidden, cfg.norm_eps)
 

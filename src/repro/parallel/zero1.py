@@ -40,6 +40,40 @@ def zero1_spec(spec: P, shape: Tuple[int, ...], rt: Runtime) -> P:
     return spec                                        # small leaf: replicated
 
 
+def zero1_bytes(params, rt: Runtime, param_pspecs=None) -> dict:
+    """Analytic per-optimizer-step collective bytes of the ZeRO-1 update
+    (fleet totals, for the bytes ledger — obs/ledger.py).
+
+    XLA emits these collectives itself (nothing crosses Python at trace
+    time), so the ledger's predicted AND measured sides both use this
+    model — residual 0 by construction, documented as analytic:
+
+      * grad reduce: the DP psum of fp32 grads, priced as a ring
+        all-reduce (reduce-scatter + all-gather): 2·(hdp-1)·bytes/rank.
+      * param all-gather: the ZeRO-1 broadcast of updated params — only
+        leaves `zero1_spec` actually shards: (hdp-1)·leaf bytes.
+
+    ``param_pspecs`` defaults to fully-replicated specs (the HDP-only
+    view); pass `sharding.params_pspecs` output for TP-aware counting.
+    """
+    hdp = rt.hdp_size
+    leaves = jax.tree.leaves(params)
+    if hdp <= 1:
+        return {"zero1_grad_reduce": 0.0, "zero1_param_gather": 0.0}
+    if param_pspecs is None:
+        spec_leaves = [P()] * len(leaves)
+    else:
+        spec_leaves = jax.tree.leaves(
+            param_pspecs, is_leaf=lambda x: isinstance(x, P))
+    grad_b = sum(leaf.size * 4 for leaf in leaves)       # fp32 grads
+    gather = 0.0
+    for spec, leaf in zip(spec_leaves, leaves):
+        if zero1_spec(spec, leaf.shape, rt) != spec:     # actually sharded
+            gather += leaf.size * leaf.dtype.itemsize
+    return {"zero1_grad_reduce": 2.0 * (hdp - 1) * float(grad_b),
+            "zero1_param_gather": (hdp - 1) * float(gather)}
+
+
 def opt_state_pspecs(param_pspecs, params, rt: Runtime):
     """Pytree of specs for optim.adamw state given the params' specs."""
     def per_leaf(spec, p):

@@ -109,6 +109,13 @@ class OnlineCalibrator:
         self._ratios: Deque[float] = deque(maxlen=_SCALE_WINDOW)
         self._samples: Deque[Tuple[int, float]] = deque(maxlen=max_samples)
         self.n_observed = 0
+        # bytes-ledger audit channel (obs/ledger.py): EMA of the relative
+        # |predicted - measured| comm-bytes residual per dispatch — a
+        # drifting value means the analytic byte model (the same model
+        # Eq. 2/Eq. 3 price communication with) no longer matches what
+        # the executables actually move
+        self._bytes_residual: Optional[float] = None
+        self._bytes_n = 0
 
     @property
     def _scale(self) -> Optional[float]:
@@ -220,6 +227,23 @@ class OnlineCalibrator:
                          fit_length=fit_length)
 
     # ------------------------------------------------------------------
+    def observe_bytes(self, pred_total: float, meas_total: float) -> None:
+        """One dispatch's (predicted, measured) comm-bytes totals from the
+        ledger; tracked as an EMA'd relative residual in `summary()`."""
+        if pred_total <= 0 and meas_total <= 0:
+            return
+        resid = abs(pred_total - meas_total) \
+            / max(abs(pred_total), abs(meas_total), 1.0)
+        if self._bytes_residual is None:
+            self._bytes_residual = resid
+        else:
+            self._bytes_residual = (self.ema * self._bytes_residual
+                                    + (1 - self.ema) * resid)
+        self._bytes_n += 1
+        get_metrics().gauge("calib.bytes_residual").set(
+            self._bytes_residual)
+
+    # ------------------------------------------------------------------
     def apply_advisory(self, rank: int, slowdown: float) -> None:
         """Mid-step straggler advisory from the anomaly detector
         (obs/anomaly.py): pull ``rank``'s speed estimate toward
@@ -294,9 +318,13 @@ class OnlineCalibrator:
         if scale is not None and scale > 0 and self._ratios:
             gap = float(np.median(np.abs(
                 np.asarray(self._ratios, float) / scale - 1.0)))
-        return {"scale": scale, "model_gap": gap,
-                "speed": [float(s) for s in self.rank_speed()],
-                "n_observed": int(self.n_observed)}
+        out = {"scale": scale, "model_gap": gap,
+               "speed": [float(s) for s in self.rank_speed()],
+               "n_observed": int(self.n_observed)}
+        if self._bytes_n > 0:
+            out["bytes_residual"] = float(self._bytes_residual)
+            out["bytes_n"] = int(self._bytes_n)
+        return out
 
     # ------------------------------------------------------------------
     def rank_speed(self) -> np.ndarray:

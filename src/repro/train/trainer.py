@@ -34,6 +34,8 @@ from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
 from repro.obs import get_metrics, get_recorder, get_tracer, monotime
+from repro.obs import ledger as ledger_mod
+from repro.parallel.zero1 import zero1_bytes
 from repro.sched.calibrate import OnlineCalibrator, fit_length_of
 from repro.models.transformer import init_params
 from repro.optim import adamw
@@ -111,6 +113,15 @@ class Trainer:
         self.calib = OnlineCalibrator(
             scheduler.spec.coeffs, rt.hdp_size, cfg.num_layers,
             quadratic=scheduler.spec.quadratic, ema=tcfg.straggler_ema)
+        self.ledger = None           # lazy bytes ledger (obs/ledger.py):
+                                     # built on the first dispatch with
+                                     # tracing or REPRO_LEDGER on, priced
+                                     # from the live plan geometry
+        self.last_ledger_record = None  # ctrl-worker hook: the most
+                                        # recent per-dispatch ledger
+                                        # record, streamed on heartbeats
+        self._ledger_meas: Dict[int, dict] = {}  # id(jitted fn) -> trace-
+                                                 # time comm tally (bytes)
         self.wave_time_fn = None     # DEPRECATED fake-clock hook: replaces
                                      # the measured dispatch time (scalar
                                      # wall or per-rank vector).  New code
@@ -280,15 +291,43 @@ class Trainer:
         else:
             self.calib.observe(costs, seconds=float(measured), **kw)
 
+    def _ensure_ledger(self, tr):
+        """Bytes ledger (obs/ledger.py), built lazily on the first
+        dispatch with tracing or REPRO_LEDGER on — and rebuilt after an
+        elastic resize (the HDP world size prices ZeRO-1 collectives and
+        the optimizer-shard term of the HBM watermark).  Returns None
+        when the ledger is off (zero cost on the disabled path)."""
+        if not (tr.enabled or ledger_mod.ledger_enabled()):
+            return None
+        if self.ledger is None or self.ledger.hdp != self.sched.hdp:
+            self.ledger = ledger_mod.Ledger(
+                self.cfg, capacity=self.tcfg.capacity, hdp=self.sched.hdp,
+                num_stages=self.rt.num_stages, tp=self.rt.tp,
+                coeffs=self.sched.spec.coeffs,
+                offload_active=self.offload_ok,
+                pos_width=3 if self.cfg.pos_embed == "mrope" else 1)
+            self.ledger.set_step_bytes(zero1_bytes(self.params, self.rt))
+        return self.ledger
+
     def _dispatch(self, tr, fn, grads, batch, name: str, idx: int,
-                  composition, fresh: bool, waves=None):
+                  composition, fresh: bool, waves=None, c_mult: int = 1,
+                  offload_ratio: float = 0.0, n_waves: int = 1):
         """Run one jitted executable under a span; a fresh cache entry
         pays its compile inside the nested "compile" span.  When tracing
         is on, the span is stamped with the dispatch's Eq. 2 price —
         modeled per-rank cost max/sum (`Wave.costs`, seconds) and token
         count — so exported traces are self-contained inputs for
         `obs.analyze.mfu_goodput`; disabled tracing skips the pricing
-        entirely (zero-overhead contract)."""
+        entirely (zero-overhead contract).
+
+        Bytes ledger: a fresh compile's trace runs under
+        ``ledger.capture()``, harvesting the instrumented comm sites'
+        static byte counts into a per-executable tally; warm dispatches
+        re-stamp the cached tally.  Every dispatch then lands one
+        predicted/measured record (plus an allocator HBM peak sample
+        where the backend exposes one) on the ledger, the span, and
+        ``last_ledger_record`` for the ctrl worker's heartbeat."""
+        led = self._ensure_ledger(tr)
         extra = {}
         if tr.enabled and waves:
             costs = np.sum([np.asarray(w.costs) for w in waves], axis=0)
@@ -298,17 +337,46 @@ class Trainer:
                                        for slot in w.slots
                                        for p in slot))}
         with tr.span(name, step=self.step, idx=idx,
-                     composition=composition, fresh=fresh, **extra):
+                     composition=composition, fresh=fresh, **extra) as sp:
             t_w = self._clock()
             if fresh:
                 with tr.span("compile", step=self.step,
                              composition=composition):
-                    grads, metrics = fn(self.params, grads, batch)
+                    if led is not None:
+                        with ledger_mod.capture() as tally:
+                            grads, metrics = fn(self.params, grads, batch)
+                        self._ledger_meas[id(fn)] = dict(tally)
+                    else:
+                        grads, metrics = fn(self.params, grads, batch)
                     loss = float(metrics["loss"])    # blocks: compiled
             else:                                    # AND executed
                 grads, metrics = fn(self.params, grads, batch)
                 loss = float(metrics["loss"])        # blocks: completed
             dt = self._clock() - t_w
+            if led is not None:
+                hbm = compat.device_memory_stats().get("peak_bytes_in_use")
+                rec = led.record_dispatch(
+                    step=self.step, idx=idx, kind=name,
+                    composition=composition, c_mult=c_mult,
+                    offload_ratio=offload_ratio, n_waves=n_waves,
+                    fresh=fresh, measured=self._ledger_meas.get(id(fn)),
+                    hbm_peak=hbm)
+                self.last_ledger_record = rec
+                sp.set("bytes_pred", rec["pred"])
+                mx = get_metrics()
+                mx.counter("comm.pred_bytes").inc(
+                    sum(rec["pred"].values()))
+                mx.gauge("mem.hbm_pred_peak").set(float(rec["hbm_pred"]))
+                if hbm is not None:
+                    mx.gauge("mem.hbm_meas_peak").set(float(hbm))
+                if "meas" in rec:
+                    sp.set("bytes_meas", rec["meas"])
+                    mx.counter("comm.meas_bytes").inc(
+                        sum(rec["meas"].values()))
+                    self.calib.observe_bytes(
+                        sum(rec["pred"].values()),
+                        sum(rec["meas"].values()))
+                    mx.gauge("comm.residual").set(led.comm_residual())
         return grads, loss, dt
 
     def train_step(self) -> Dict:
@@ -351,7 +419,9 @@ class Trainer:
                 rd_waves = [plan.waves[i] for i in rd.wave_ids]
                 grads, loss, dt = self._dispatch(
                     tr, fn, grads, batch, "round", i, rd.composition,
-                    fresh, waves=rd_waves)
+                    fresh, waves=rd_waves, c_mult=rd.c_mult,
+                    offload_ratio=rd.offload_ratio,
+                    n_waves=len(rd.wave_ids))
                 losses.append(loss)
                 mx.histogram("trainer.dispatch_s").observe(dt)
                 wall = dt
@@ -380,7 +450,8 @@ class Trainer:
                                           lw.offload_ratio)
                 grads, loss, dt = self._dispatch(
                     tr, fn, grads, batch, "wave", i, lw.composition,
-                    fresh, waves=[wave])
+                    fresh, waves=[wave], c_mult=lw.c_mult,
+                    offload_ratio=lw.offload_ratio)
                 losses.append(loss)
                 mx.histogram("trainer.dispatch_s").observe(dt)
                 wall = dt

@@ -121,6 +121,45 @@ def test_offload_remat_executes_on_host_memory():
 
 
 # ---------------------------------------------------------------------------
+# Eq. 3 transfer-byte pricing (shared with the bytes ledger, ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_eq3_bytes_matches_solver_arithmetic():
+    """d2h == h2d == r·(l-2)·Act(s): exactly the transfer term solve_eq3's
+    D(s) numerator subtracts — the two must never drift apart."""
+    ell = max(CFG.num_layers, 3)
+    for s in (20_000, 262_144, 1_048_576):
+        r, _ = OF.solve_eq3(COEFFS, s, 8192, CFG.num_layers)
+        d2h, h2d = OF.eq3_bytes(COEFFS, s, r, CFG.num_layers)
+        want = r * (ell - 2) * OF.act_bytes(COEFFS, s)
+        assert d2h == pytest.approx(want)
+        assert h2d == pytest.approx(want)
+
+
+def test_eq3_bytes_zero_for_nonpositive_ratio():
+    assert OF.eq3_bytes(COEFFS, 100_000, 0.0, CFG.num_layers) == (0.0, 0.0)
+    assert OF.eq3_bytes(COEFFS, 100_000, -0.5, CFG.num_layers) == (0.0, 0.0)
+
+
+def test_eq3_bytes_config_passthrough_matches_coeffs():
+    d2h_cfg, h2d_cfg = OF.eq3_bytes(CFG, 262_144, 0.5, CFG.num_layers)
+    d2h, h2d = OF.eq3_bytes(OF.analytic_coeffs(CFG), 262_144, 0.5,
+                            CFG.num_layers)
+    assert d2h_cfg == pytest.approx(d2h) and h2d_cfg == pytest.approx(h2d)
+    assert d2h_cfg > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.integers(1, 2_000_000),
+       r=st.floats(min_value=0.0, max_value=1.0))
+def test_eq3_bytes_symmetric_and_monotone(s, r):
+    d2h, h2d = OF.eq3_bytes(COEFFS, s, r, CFG.num_layers)
+    assert d2h == h2d >= 0.0
+    d2h2, _ = OF.eq3_bytes(COEFFS, s, min(1.0, r + 0.1), CFG.num_layers)
+    assert d2h2 >= d2h
+
+
+# ---------------------------------------------------------------------------
 # stage-aware offload windows (PP x offload, ISSUE 4 satellite)
 # ---------------------------------------------------------------------------
 
