@@ -1,12 +1,13 @@
 """Observability overhead + trace-validity + cluster-analytics benchmark
 → ``BENCH_obs.json``.
 
-Three measurements:
+Four measurements:
 
 * **Tracing overhead.**  Cost of the span layer PLUS the bytes ledger
-  on the hot path, as a fraction of an untraced CPU training step:
-  (events-per-step x per-span cost + ledger-records-per-step x
-  per-record cost) / median clean (no-compile) untraced step wall.
+  PLUS the in-graph numerics sentinels on the hot path, as a fraction
+  of an untraced CPU training step: (events-per-step x per-span cost +
+  ledger-records-per-step x per-record cost + the A/B'd fused-sentinel
+  apply delta) / median clean (no-compile) untraced step wall.
   The ledger leg runs on the real trainer too — the ledger rides the
   tracer, so record counts come from the same traced steps.  Gate
   (CI): combined overhead < 2% of a step AND the traced leg produced
@@ -30,12 +31,28 @@ Three measurements:
   - a CLEAN run — the merged cross-process trace must validate, every
     (step x lane) time attribution must close within 5% of its step
     wall, MFU/goodput must price, and the online anomaly detector must
-    emit ZERO advisories (false-positive gate);
+    emit ZERO advisories (false-positive gate — numerics advisories
+    count too);
   - an injected ``slow_ranks={1: 3.0}`` straggler run — a straggler
     advisory for rank 1 must fire from the MID-step telemetry stream
     within a bounded number of fleet waves, and its recorded
     ``rank_speed_after`` must show `SchedulerService` already
     de-weighted the slow rank when it fired.
+
+* **Numerics observatory (obs/numerics + obs/replay).**  Two drills:
+
+  - guarded continuation, single process — a clean run vs the same run
+    with ``nan_fault`` poisoning one wave: pre-fault losses bit-equal,
+    the fault step's optimizer apply is skipped (``applied == 0``) and
+    a flight-recorder dump fires, the next step's loss is finite AND
+    bit-equal to a reference that never executed the fault step at all
+    (the guard's no-op is bitwise invisible);
+  - an injected-NaN control-plane run — the controller's numerics
+    channel must fire an advisory from the streamed findings, a worker
+    must leave a provenance-bearing flight-recorder dump, and a
+    ``python -m repro.obs.replay <dump> --json`` subprocess must
+    reproduce the fault signature bit-exactly (exit 0) while the run
+    itself continues to a finite loss.
 
 Run: ``python -m benchmarks.obs_bench [--skip-validate]
 [--skip-cluster] [--out PATH]``
@@ -60,7 +77,7 @@ _CHILD_FLAG = "--validate-child"
 _CLUSTER_FLAG = "--cluster-child"
 
 
-def _mk_trainer(sched_async: bool = False):
+def _mk_trainer(sched_async: bool = False, **tkw):
     from repro import compat
     from repro.configs.registry import get_config
     from repro.data.distribution import LengthDistribution
@@ -79,7 +96,7 @@ def _mk_trainer(sched_async: bool = False):
                             use_offload=False, sched_async=sched_async)
     return Trainer(cfg, rt, AdamWConfig(lr=1e-3, total_steps=64),
                    sched, TrainerConfig(capacity=256,
-                                        sched_async=sched_async))
+                                        sched_async=sched_async, **tkw))
 
 
 def tracing_overhead(steps: int = 5) -> dict:
@@ -169,11 +186,41 @@ def tracing_overhead(steps: int = 5) -> dict:
     finally:
         set_tracer(prev)
 
+    # numerics-sentinel cost (obs/numerics.py).  The fused in-graph
+    # summary rides the once-per-step optimizer apply; A/B the jitted
+    # apply (sentinels + guard vs plain) on the trainer's real trees and
+    # charge the per-call delta against the same untraced step wall.
+    # Conservative: the step wall above already PAID the sentinels (the
+    # trainer runs with the guard on), so the composed fraction double
+    # counts them rather than hiding them.
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.train_step import make_accum_steps
+    _, apply_plain = make_accum_steps(tr.cfg, tr.rt, tr.opt_cfg,
+                                      numerics=False)
+    _, apply_sent = make_accum_steps(tr.cfg, tr.rt, tr.opt_cfg,
+                                     guard=True)
+    ap, asn = jax.jit(apply_plain), jax.jit(apply_sent)
+    g = jax.tree.map(jnp.zeros_like, tr.params)
+
+    def med_apply(f, n=30):
+        jax.block_until_ready(f(tr.params, tr.opt_state, g))  # compile
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(tr.params, tr.opt_state, g))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    sentinel_s = max(0.0, med_apply(asn) - med_apply(ap))
+
     events_per_step = n_events / max(ran_on, 1)
     records_per_step = ledger_records / max(ran_on, 1)
     span_frac = events_per_step * span_s / off if off > 0 else 0.0
     ledger_frac = records_per_step * rec_s / off if off > 0 else 0.0
-    frac = span_frac + ledger_frac
+    sentinel_frac = sentinel_s / off if off > 0 else 0.0
+    frac = span_frac + ledger_frac + sentinel_frac
     return {"step_ms_traced": round(on * 1e3, 3),      # informational
             "step_ms_untraced": round(off * 1e3, 3),
             "events_per_step": round(events_per_step, 1),
@@ -183,10 +230,60 @@ def tracing_overhead(steps: int = 5) -> dict:
             "ledger_rec_cost_us": round(rec_s * 1e6, 3),
             "ledger_frac": round(ledger_frac, 7),
             "tally_cost_us_disabled": round(tally_off_s * 1e6, 4),
+            "sentinel_cost_us": round(sentinel_s * 1e6, 3),
+            "sentinel_frac": round(sentinel_frac, 7),
             "overhead_frac": round(frac, 7),
             "events_recorded": n_events,
             "steps": steps, "gate": OVERHEAD_GATE,
             "gate_ok": bool(frac < OVERHEAD_GATE and ledger_records > 0)}
+
+
+def guard_continuation() -> dict:
+    """Guarded-continuation drill (single process): a clean 4-step run
+    vs the same run with ``nan_fault`` poisoning step 2 / wave 0.
+
+    Gates: pre-fault losses bit-equal (the sentinels and the guard's
+    finite-path `where` are bitwise invisible); the fault step reports a
+    non-finite loss, skips the apply (``applied == 0``) and leaves a
+    flight-recorder dump; the post-skip step is finite AND bit-equal to
+    a reference that rewound to the pre-fault state and never executed
+    the fault step at all — i.e. the guarded skip is exactly a no-op.
+    """
+    import math
+
+    fault = {"step": 2, "wave": 0}
+    a = _mk_trainer(calibrate=False)
+    la = [a.train_step()["loss"], a.train_step()["loss"]]
+    p2, o2 = a.params, a.opt_state      # state ENTERING the fault step
+    la += [a.train_step()["loss"], a.train_step()["loss"]]
+
+    b = _mk_trainer(calibrate=False, nan_fault=fault)
+    lb, applied = [], []
+    for _ in range(4):
+        lb.append(b.train_step()["loss"])
+        applied.append(int(b.last_numerics["applied"]))
+
+    # skip-parity reference: rewind the clean trainer to the pre-fault
+    # state and jump the step cursor past the fault — what the guarded
+    # run's step 3 must reproduce bit-exactly
+    a.params, a.opt_state = p2, o2
+    a.step = 3
+    skip3 = a.train_step()["loss"]
+
+    pre = lb[:2] == la[:2]
+    parity = lb[3] == skip3
+    ok = bool(pre and not math.isfinite(lb[2]) and math.isfinite(lb[3])
+              and applied == [1, 1, 0, 1] and parity
+              and b._numerics_dumps >= 1)
+
+    def safe(ls):
+        return [l if math.isfinite(l) else None for l in ls]
+    return {"losses_clean": safe(la), "losses_fault": safe(lb),
+            "applied": applied, "prefault_bitexact": bool(pre),
+            "fault_step_nonfinite": not math.isfinite(lb[2]),
+            "postfault_finite": math.isfinite(lb[3]),
+            "skip_parity_bitexact": bool(parity),
+            "fault_dumps": b._numerics_dumps, "gate_ok": ok}
 
 
 # -- 8-device trace validation (subprocess) -----------------------------
@@ -275,15 +372,20 @@ def trace_validation(trace_out: str = None) -> dict:
 
 
 # -- cluster analytics: merged traces + attribution + anomaly gates -----
-def _cluster_child(trace_dir: str, slow: bool) -> None:
+def _cluster_child(trace_dir: str, slow: bool, nan: bool = False) -> None:
     """Runs in its own process: a 2-worker hdp=4 control-plane run with
     tracing on in every process (workers export on exit via
     $REPRO_TRACE_DIR), optionally with the 3x fault-injection clock on
-    rank 1.  Prints one JSON line: advisories, detector summary, final
-    rank speeds."""
+    rank 1 or the NaN numerics drill on step 2.  Prints one JSON line:
+    advisories, detector summary, final rank speeds, per-step losses."""
+    import math
     os.makedirs(trace_dir, exist_ok=True)
     os.environ["REPRO_TRACE"] = "1"          # workers inherit
     os.environ["REPRO_TRACE_DIR"] = trace_dir
+    if nan:
+        # workers' flight-recorder dumps (the numerics monitor fires one
+        # on the non-finite step) land next to the traces
+        os.environ["REPRO_OBS_DIR"] = trace_dir
     from repro.configs.registry import get_config
     from repro.core.planner import PlanSpec
     from repro.ctrl.controller import Controller, ControllerConfig
@@ -299,16 +401,19 @@ def _cluster_child(trace_dir: str, slow: bool) -> None:
                           context=1024)
     spec = PlanSpec.for_config(cfg, capacity=256, hdp=4,
                                use_offload=False)
+    nan_kw = dict(nan_fault={"step": 2, "wave": 0},
+                  ckpt_dir=os.path.join(trace_dir, "ckpt"),
+                  ckpt_every=1) if nan else {}
     ctl = Controller(ds, cfg, spec, ControllerConfig(
         num_workers=2, steps=4, calibrate=True,
         heartbeat_interval=0.05,     # stream per-wave telemetry mid-step
         slow_ranks={1: 3.0} if slow else None,
         runtime_kw={"remat": "none", "kv_chunk": 64},
-        opt_kw={"lr": 1e-3}))
+        opt_kw={"lr": 1e-3}, **nan_kw))
     cluster = LocalCluster(ctl)
     cluster.start()
     try:
-        cluster.run()
+        hist = cluster.run()
     finally:
         cluster.shutdown()
     get_tracer().to_chrome(os.path.join(
@@ -319,16 +424,20 @@ def _cluster_child(trace_dir: str, slow: bool) -> None:
         "telemetry": {str(k): v
                       for k, v in ctl.telemetry_summary().items()},
         "rank_speed": [round(float(s), 4)
-                       for s in ctl.calib.rank_speed()]}))
+                       for s in ctl.calib.rank_speed()],
+        "losses": [r["loss"] if math.isfinite(r["loss"]) else None
+                   for r in hist]}))
 
 
-def _run_cluster_child(trace_dir: str, slow: bool) -> dict:
+def _run_cluster_child(trace_dir: str, slow: bool,
+                       nan: bool = False) -> dict:
     env = dict(os.environ)
     env.pop("REPRO_TRACE", None)       # child enables programmatically
     env.pop("REPRO_TRACE_DIR", None)
     env["JAX_PLATFORMS"] = "cpu"
-    cmd = [sys.executable, "-m", "benchmarks.obs_bench", _CLUSTER_FLAG,
-           "--trace-dir", trace_dir] + (["--slow"] if slow else [])
+    cmd = ([sys.executable, "-m", "benchmarks.obs_bench", _CLUSTER_FLAG,
+            "--trace-dir", trace_dir] + (["--slow"] if slow else [])
+           + (["--nan"] if nan else []))
     r = subprocess.run(cmd, capture_output=True, text=True,
                        timeout=1800, env=env)
     if r.returncode != 0:
@@ -367,6 +476,8 @@ def cluster_analysis(base_dir: str = None) -> dict:
                 default=None)
     lanes = len({(r["pid"], r["tid"]) for r in attribution})
     n_fp = len(clean["advisories"])
+    n_num = len([a for a in clean["advisories"]
+                 if a.get("kind") == "numerics"])
     clean_ok = bool(ok and n_fp == 0 and worst is not None
                     and worst <= ATTR_GATE and lanes >= 3
                     and (mfu.get("mfu") or 0) > 0
@@ -376,6 +487,7 @@ def cluster_analysis(base_dir: str = None) -> dict:
         "problems": problems[:4], "lanes": lanes,
         "attr_worst": round(worst, 5) if worst is not None else None,
         "attr_gate": ATTR_GATE, "false_positives": n_fp,
+        "numerics_advisories": n_num,     # subset of false_positives
         "mfu": mfu.get("mfu"), "goodput": mfu.get("goodput"),
         "tokens_per_s": mfu.get("tokens_per_s"),
         "waves_priced": mfu.get("n_waves"),
@@ -419,14 +531,80 @@ def cluster_analysis(base_dir: str = None) -> dict:
     return out
 
 
+def numerics_cluster(base_dir: str = None) -> dict:
+    """Injected-NaN control-plane drill: the full observe -> dump ->
+    replay loop on a real 2-worker run.
+
+    Gates: the controller's numerics channel fired an advisory; a worker
+    left a provenance-bearing flight-recorder dump (``run_manifest`` in
+    meta + a ``step_provenance`` record with ``applied == 0``); a
+    ``python -m repro.obs.replay <dump> --json`` subprocess reproduced
+    the fault signature and wave losses bit-exactly (exit 0, ``ok``);
+    and the run itself continued past the skipped step to a finite
+    final loss."""
+    base_dir = base_dir or OBS_DIR
+    nan_dir = os.path.join(base_dir, "cluster_numerics")
+    res = _run_cluster_child(nan_dir, slow=False, nan=True)
+    advs = [a for a in res["advisories"] if a.get("kind") == "numerics"]
+
+    # provenance-bearing dump from a worker (controller advisory dumps
+    # carry no run_manifest and are skipped)
+    dump, sig = None, None
+    for p in sorted(glob.glob(os.path.join(nan_dir, "flightrec_*.json"))):
+        with open(p) as f:
+            doc = json.load(f)
+        provs = [e for e in doc.get("events", [])
+                 if e.get("kind") == "step_provenance"
+                 and not e.get("applied", 1)]
+        if provs and (doc.get("meta") or {}).get("run_manifest"):
+            dump, sig = p, provs[-1]
+            break
+
+    replay = None
+    if dump is not None:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)   # replay forces its own device count
+        env["REPRO_OBS_DIR"] = os.path.join(nan_dir, "replay_obs")
+        r = subprocess.run([sys.executable, "-m", "repro.obs.replay",
+                            dump, "--json"], capture_output=True,
+                           text=True, timeout=1800, env=env)
+        for line in r.stdout.splitlines():
+            if line.startswith("REPLAY_JSON "):
+                replay = json.loads(line[len("REPLAY_JSON "):])
+        if replay is None:
+            replay = {"ok": False, "error": r.stderr[-400:]}
+        replay["returncode"] = r.returncode
+
+    losses = res.get("losses") or []
+    continued = bool(len(losses) == 4 and losses[2] is None
+                     and losses[3] is not None)
+    ok = bool(advs and dump is not None and replay is not None
+              and replay.get("ok") and replay["returncode"] == 0
+              and continued)
+    return {"numerics_advisories": len(advs),
+            "fault_step": sig.get("step") if sig else None,
+            "grad_nonfinite": (sig.get("sentinels") or {})
+            .get("grad_nonfinite") if sig else None,
+            "dump": os.path.basename(dump) if dump else None,
+            "losses": losses, "continued_finite": continued,
+            "replay": {k: replay.get(k) for k in
+                       ("ok", "plan_hash_ok", "signature_ok",
+                        "losses_exact", "sentinels_exact",
+                        "restored_ckpt", "returncode", "error")
+                       if k in replay} if replay else None,
+            "gate_ok": ok}
+
+
 # -- snapshot / harness wiring ------------------------------------------
 def snapshot(path: str = SNAPSHOT_PATH, skip_validate: bool = False,
              skip_cluster: bool = False, steps: int = 5) -> dict:
-    snap = {"overhead": tracing_overhead(steps=steps)}
+    snap = {"overhead": tracing_overhead(steps=steps),
+            "numerics_guard": guard_continuation()}
     if not skip_validate:
         snap["trace_8dev"] = trace_validation()
     if not skip_cluster:
         snap["cluster"] = cluster_analysis()
+        snap["numerics"] = numerics_cluster()
     with open(path, "w") as f:
         json.dump(snap, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -437,6 +615,12 @@ def rows_from(snap: dict) -> list:
     ov = snap["overhead"]
     rows = [("obs.tracing_overhead", ov["step_ms_traced"] * 1e3,
              f"overhead_frac={ov['overhead_frac']}")]
+    ng = snap.get("numerics_guard")
+    if ng:
+        rows.append(("obs.numerics_guard", 0.0,
+                     f"applied={''.join(map(str, ng['applied']))} "
+                     f"skip_parity={ng['skip_parity_bitexact']} "
+                     f"dumps={ng['fault_dumps']}"))
     tv = snap.get("trace_8dev")
     if tv:
         rows.append(("obs.trace_8dev_valid", 0.0,
@@ -452,6 +636,13 @@ def rows_from(snap: dict) -> list:
                      float(cl["straggler"]["detect_waves"] or -1),
                      f"applied={cl['straggler']['applied_mid_step']} "
                      f"shifted={cl['straggler']['speed_shifted']}"))
+    nm = snap.get("numerics")
+    if nm:
+        rp = nm.get("replay") or {}
+        rows.append(("obs.numerics_replay", 0.0,
+                     f"advisories={nm['numerics_advisories']} "
+                     f"replay_ok={rp.get('ok')} "
+                     f"continued={nm['continued_finite']}"))
     return rows
 
 
@@ -473,6 +664,8 @@ def main() -> None:
                     help=argparse.SUPPRESS)
     ap.add_argument("--slow", action="store_true",
                     help=argparse.SUPPRESS)   # cluster child: straggler
+    ap.add_argument("--nan", action="store_true",
+                    help=argparse.SUPPRESS)   # cluster child: NaN drill
     ap.add_argument("--trace-out", default=None)
     ap.add_argument("--trace-dir", default=None)
     args = ap.parse_args()
@@ -482,7 +675,8 @@ def main() -> None:
         return
     if args.cluster_child:
         _cluster_child(args.trace_dir
-                       or os.path.join(OBS_DIR, "cluster"), args.slow)
+                       or os.path.join(OBS_DIR, "cluster"), args.slow,
+                       nan=args.nan)
         return
     snap = snapshot(args.out, skip_validate=args.skip_validate,
                     skip_cluster=args.skip_cluster, steps=args.steps)
@@ -491,6 +685,9 @@ def main() -> None:
         raise SystemExit(
             f"tracing overhead {snap['overhead']['overhead_frac']:.3%} "
             f"exceeds the {OVERHEAD_GATE:.0%} gate")
+    if not snap["numerics_guard"]["gate_ok"]:
+        raise SystemExit(
+            f"numerics guard gate failed: {snap['numerics_guard']}")
     tv = snap.get("trace_8dev")
     if tv is not None and not tv["ok"]:
         raise SystemExit(f"8-device trace invalid: {tv['problems']}")
@@ -500,6 +697,13 @@ def main() -> None:
             f"cluster analytics gate failed: "
             f"clean={cl['clean']['gate_ok']} "
             f"straggler={cl['straggler']['gate_ok']}")
+    nm = snap.get("numerics")
+    if nm is not None and not nm["gate_ok"]:
+        raise SystemExit(
+            f"numerics replay gate failed: "
+            f"advisories={nm['numerics_advisories']} "
+            f"dump={nm['dump']} replay={nm['replay']} "
+            f"continued={nm['continued_finite']}")
 
 
 if __name__ == "__main__":

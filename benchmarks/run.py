@@ -19,16 +19,105 @@ and ``BENCH_comm.json`` — the comm-bytes snapshot (HDP vs static-CP
 total comm priced by the bytes ledger, plus the instrumented
 predicted-vs-measured residual; see benchmarks/comm_bench.py) — so the
 repo's perf trajectory is recorded in-tree.
+
+``python -m benchmarks.run --append-history`` skips the benchmarks and
+instead appends one timestamped entry — the headline metric of every
+``BENCH_*.json`` present — to ``BENCH_trajectory.json``, the committed
+cross-PR perf-trajectory ledger (CI runs it after the bench gates).
 """
 from __future__ import annotations
 
+import argparse
+import glob
 import json
+import os
 import subprocess
 import sys
 import time
 
 SNAPSHOT_PATH = "BENCH_planner.json"
 KERNEL_SNAPSHOT_PATH = "BENCH_kernels.json"
+TRAJECTORY_PATH = "BENCH_trajectory.json"
+
+# headline metrics lifted per snapshot into the trajectory ledger
+# (dotted paths; missing ones are skipped so schema drift never breaks
+# the append)
+HEADLINES = {
+    "planner": ["balance_dp.makespan", "balance_dp.bubble_frac",
+                "balance_dp.planner_wall_ms"],
+    "scheduler": ["bimodal.makespan_reduction", "bimodal.keys_reduction",
+                  "uniform.makespan_reduction"],
+    "kernels": ["kernel.flash_attention.pallas_interp.us_per_call",
+                "kernel.ring_flash.pallas_interp.g4.us_per_call",
+                "devices"],
+    "serve": ["continuous.tok_per_s", "continuous.latency_p99_ms",
+              "makespan_reduction"],
+    "obs": ["overhead.overhead_frac", "overhead.sentinel_frac",
+            "overhead.gate_ok", "trace_8dev.ok", "cluster.gate_ok",
+            "numerics_guard.gate_ok", "numerics.gate_ok"],
+    "ctrl": ["overhead_frac", "controller.per_step_ms"],
+    "comm": ["analytic.saving_frac", "instrumented.residual"],
+}
+
+
+def _dig(doc, path: str):
+    """Dotted-path lookup that tolerates literal dots INSIDE key names
+    (e.g. BENCH_kernels' ``kernel.ring_flash.pallas_interp`` is one
+    key): at each level the longest matching key prefix wins."""
+    keys = path.split(".")
+    while keys:
+        if not isinstance(doc, dict):
+            return None
+        for n in range(len(keys), 0, -1):
+            k = ".".join(keys[:n])
+            if k in doc:
+                doc, keys = doc[k], keys[n:]
+                break
+        else:
+            return None
+    return doc
+
+
+def append_history(path: str = TRAJECTORY_PATH) -> dict:
+    """Append one timestamped headline-metric entry per ``BENCH_*.json``
+    to the trajectory ledger (a JSON list, committed in-tree), so the
+    repo's perf history survives snapshot overwrites PR over PR."""
+    entry = {"t": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+             "snapshots": {}}
+    try:
+        r = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                           capture_output=True, text=True, timeout=10)
+        entry["git"] = r.stdout.strip() or None
+    except Exception:
+        entry["git"] = None
+    for f in sorted(glob.glob("BENCH_*.json")):
+        stem = os.path.basename(f)[len("BENCH_"):-len(".json")]
+        if stem == "trajectory":
+            continue
+        try:
+            with open(f) as fh:
+                doc = json.load(fh)
+        except Exception as e:       # a torn snapshot must not kill CI
+            entry["snapshots"][stem] = {"error": repr(e)[:80]}
+            continue
+        head = {p: _dig(doc, p) for p in HEADLINES.get(stem, [])}
+        head = {p: v for p, v in head.items() if v is not None}
+        if isinstance(doc, dict) and "gate_ok" in doc \
+                and "gate_ok" not in head:
+            head["gate_ok"] = doc["gate_ok"]
+        entry["snapshots"][stem] = head
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                hist = json.load(fh)
+        except Exception:
+            hist = []
+    hist.append(entry)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return entry
 
 
 def kernels_snapshot(path: str = KERNEL_SNAPSHOT_PATH) -> list:
@@ -95,6 +184,17 @@ def planner_snapshot(path: str = SNAPSHOT_PATH) -> dict:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--append-history", action="store_true",
+                    help="append BENCH_*.json headline metrics to "
+                         f"{TRAJECTORY_PATH} and exit (no benchmarks)")
+    args = ap.parse_args()
+    if args.append_history:
+        entry = append_history()
+        sys.stderr.write(f"[trajectory] -> {TRAJECTORY_PATH} "
+                         f"({len(entry['snapshots'])} snapshots)\n")
+        print(json.dumps(entry, indent=1, sort_keys=True))
+        return
     from benchmarks import (ablation, case_study, data_dist, end_to_end,
                             flops_imbalance, offload_sweep, pipeline_bubble)
     rows = []

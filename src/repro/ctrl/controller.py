@@ -102,6 +102,13 @@ class ControllerConfig:
     # fake per-rank clock on the owning worker (validates the straggler
     # feedback loop end-to-end; tests and gamedays)
     slow_ranks: Optional[Dict[int, float]] = None
+    # numerics drill + guard (obs/numerics.py): nan_fault={"step": k,
+    # "wave": i} poisons that wave's loss denominator on every worker
+    # (SPMD — all ranks see the same NaN); numerics_guard makes the
+    # trainers skip the optimizer apply on non-finite grads instead of
+    # poisoning the model
+    nan_fault: Optional[Dict] = None
+    numerics_guard: bool = True
     # online anomaly detection over the streamed per-wave telemetry
     # (obs/anomaly.py): every heartbeat frame feeds the detector from
     # the reader thread, and a straggler advisory re-weights the
@@ -345,7 +352,9 @@ class Controller:
                 "ckpt_owner": 0 in h.ranks,
                 "resume_step": resume_step,
                 "heartbeat_interval": c.heartbeat_interval,
-                "slow_ranks": c.slow_ranks, "serve": c.serve}
+                "slow_ranks": c.slow_ranks, "serve": c.serve,
+                "nan_fault": c.nan_fault,
+                "numerics_guard": c.numerics_guard}
 
     def _await(self, h: WorkerHandle, mtype: str, step: Optional[int] = None
                ) -> dict:
@@ -451,6 +460,17 @@ class Controller:
                 dones = {h: self._await(h, "step_done", step=step)
                          for h in live}
             self._ingest_telemetry(step, plan, dones)
+            # numerics channel: the step_done summary of ONE worker only
+            # (SPMD — every worker computed identical sentinels; feeding
+            # all copies would distort the EWMA baselines and multiply
+            # advisory counts)
+            if self.anomaly is not None:
+                h0 = next(iter(dones))
+                num = dones[h0].get("numerics")
+                if num:
+                    advs = self.anomaly.ingest_numerics(h0.wid, num)
+                    if advs:
+                        self._apply_advisories(advs)
         rec0 = next(iter(dones.values()))
         self.step = step + 1
         get_metrics().counter("ctrl.steps").inc()
@@ -537,6 +557,11 @@ class Controller:
                                     self.ccfg.heartbeat_interval)
         for rec in (msg.get("telemetry") or []):
             advs += det.ingest_wave(h.wid, rec)
+            if rec.get("numerics"):
+                # mid-step numerics findings (a non-finite wave loss)
+                # stream on the same frames — the controller knows
+                # before the step's apply completes
+                advs += det.ingest_numerics(h.wid, rec["numerics"])
         if advs:
             self._apply_advisories(advs)
 

@@ -292,7 +292,10 @@ class WorkerAgent:
                              max_round_waves=int(
                                  cfg.get("max_round_waves", 0)),
                              sched_async=True,   # consume shipped buffers
-                             calibrate=False)    # controller calibrates
+                             calibrate=False,    # controller calibrates
+                             numerics_guard=bool(
+                                 cfg.get("numerics_guard", True)),
+                             nan_fault=cfg.get("nan_fault"))
         self.trainer = Trainer(cfg["model"], rt, opt, client, tcfg,
                                seed=int(cfg.get("seed", 0)))
         self.trainer.telemetry_fn = self._on_dispatch
@@ -358,6 +361,13 @@ class WorkerAgent:
             # measured byte record rides the same wire frames, so the
             # controller folds a fleet ledger out of heartbeats
             rec["ledger"] = self.trainer.last_ledger_record
+        if self.trainer is not None and self.trainer.last_wave_findings:
+            # numerics findings (obs/numerics.py) fire MID-step: they
+            # ride the streamed telemetry so the controller's numerics
+            # channel sees a non-finite wave before the step completes
+            rec["numerics"] = {
+                "step": self.trainer.step,
+                "findings": list(self.trainer.last_wave_findings)}
         self._telemetry.append(rec)
         with self._stream_lock:
             self._stream_pending.append(rec)
@@ -371,7 +381,8 @@ class WorkerAgent:
                         "loss": rec["loss"],
                         "grad_norm": rec["grad_norm"],
                         "t_mono": monotime(), "t_wall": time.time(),
-                        "keys": keys, "telemetry": self._telemetry})
+                        "keys": keys, "telemetry": self._telemetry,
+                        "numerics": self.trainer.last_numerics})
 
     # -- serve mode ----------------------------------------------------
     def _serve_loop(self, cfg: dict) -> None:

@@ -33,6 +33,9 @@ from repro.obs.analyze import (attribute_steps, comm_summary, merge_traces,
 from repro.obs.anomaly import Advisory, AnomalyConfig, AnomalyDetector
 from repro.obs.ledger import Ledger, ledger_enabled, set_ledger_enabled
 from repro.obs.metrics import MetricsRegistry, get_metrics
+from repro.obs.numerics import (NONFINITE_SEVERITY, MonitorConfig,
+                                NumericsMonitor, StepProvenance,
+                                nonfinite_signature, plan_fingerprint)
 from repro.obs.recorder import FlightRecorder, get_recorder
 from repro.obs.report import render_report
 from repro.obs.trace import (Tracer, get_tracer, monotime, set_tracer,
@@ -41,6 +44,8 @@ from repro.obs.trace import (Tracer, get_tracer, monotime, set_tracer,
 __all__ = [
     "MetricsRegistry", "FlightRecorder", "Tracer", "Ledger",
     "Advisory", "AnomalyConfig", "AnomalyDetector",
+    "MonitorConfig", "NumericsMonitor", "StepProvenance",
+    "NONFINITE_SEVERITY", "plan_fingerprint", "nonfinite_signature",
     "get_metrics", "get_recorder", "get_tracer", "set_tracer",
     "monotime", "render_report", "validate_chrome_trace", "configure",
     "merge_traces", "attribute_steps", "mfu_goodput", "comm_summary",

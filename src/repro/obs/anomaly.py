@@ -72,6 +72,14 @@ class AnomalyConfig:
     # advisory rate limiting
     cooldown_waves: int = 16         # per (kind, rank/worker) re-fire gap
     max_pending_steps: int = 4       # partial cross-worker joins kept
+    # numerics channel (obs/numerics.py findings -> advisories).  A
+    # non-finite finding always fires with NONFINITE_SEVERITY (finite,
+    # JSON-safe, and far above the controller's anomaly_dump_z); spike
+    # findings carry their own z as severity.  A clean run must stay
+    # silent — the monitor's thresholds are the gate, the detector only
+    # converts + rate-limits.
+    numerics_cooldown: int = 4       # steps between numerics advisories
+                                     # per worker
 
 
 @dataclass
@@ -79,7 +87,7 @@ class Advisory:
     """One structured anomaly finding.  ``severity`` is the z-score (or
     ratio-to-threshold for the non-statistical signals); ``slowdown``
     is the straggler's estimated relative slowdown (>= 1)."""
-    kind: str                        # straggler|wave_gap|throughput|heartbeat
+    kind: str            # straggler|wave_gap|throughput|heartbeat|numerics
     step: Optional[int]
     rank: Optional[int]
     worker: Optional[int]
@@ -140,6 +148,7 @@ class AnomalyDetector:
         self._hb_jitter: Dict[int, _Ewma] = {}
         self._hb_n: Dict[int, int] = {}
         self._cooldown: Dict[Tuple[str, int], int] = {}
+        self._num_last_step: Dict[int, int] = {}   # numerics cooldown
         self.advisory_counts: Dict[str, int] = {}
 
     # -- emission ------------------------------------------------------
@@ -302,6 +311,48 @@ class AnomalyDetector:
                     detail=f"rank {r} EWMA wall/median {ew.mean:.2f} "
                            f"(z={z:.1f} over {ew.n} waves)")
         return out
+
+    # -- numerics channel ----------------------------------------------
+    def ingest_numerics(self, wid: int, rec: dict) -> List[Advisory]:
+        """Findings from a worker's NumericsMonitor (obs/numerics.py):
+        either a streamed per-wave record or the ``step_done`` summary,
+        both carrying a ``findings`` list (plus the summary's
+        ``grad_nonfinite`` count as a belt-and-braces trigger).  The
+        monitor already did the statistics — this channel converts
+        findings into Advisory records, rate-limited per worker in
+        steps, so they flow through the controller's existing
+        ``_apply_advisories`` path; non-finite findings carry
+        NONFINITE_SEVERITY and cross every dump threshold."""
+        with self._lock:
+            out: List[Advisory] = []
+            findings = list(rec.get("findings") or [])
+            if not findings and int(rec.get("grad_nonfinite") or 0) > 0:
+                from repro.obs.numerics import NONFINITE_SEVERITY
+                findings = [{"reason": "nonfinite_grads",
+                             "step": rec.get("step"),
+                             "value": rec.get("grad_nonfinite"),
+                             "severity": NONFINITE_SEVERITY,
+                             "detail": f"{rec.get('grad_nonfinite')} "
+                                       "non-finite grad elements"}]
+            for f in findings:
+                step = f.get("step", rec.get("step"))
+                step_i = int(step) if step is not None else 0
+                last = self._num_last_step.get(wid)
+                if last is not None \
+                        and step_i - last < self.cfg.numerics_cooldown:
+                    continue
+                self._num_last_step[wid] = step_i
+                adv = Advisory(
+                    kind="numerics", step=step, rank=None, worker=wid,
+                    value=float(f.get("value") or 0.0),
+                    baseline=float(f.get("baseline") or 0.0),
+                    severity=float(f.get("severity", 0.0)),
+                    waves_seen=self.waves_seen,
+                    detail=f.get("detail") or f.get("reason", ""))
+                self.advisory_counts["numerics"] = \
+                    self.advisory_counts.get("numerics", 0) + 1
+                out.append(adv)
+            return out
 
     # -- heartbeat arrivals --------------------------------------------
     def ingest_heartbeat(self, wid: int, t_arrival: float,

@@ -40,6 +40,14 @@ class FlightRecorder:
         self._ring: deque = deque(maxlen=int(capacity))
         self._lock = threading.Lock()
         self._n_dumps = 0
+        self.meta: dict = {}
+
+    def set_meta(self, key: str, value) -> None:
+        """Attach sticky run-level context (e.g. the trainer's
+        ``run_manifest`` — obs/numerics.py) included in every dump;
+        unlike ring events, meta never rotates out."""
+        with self._lock:
+            self.meta[key] = _trace._jsonsafe(value)
 
     def record(self, kind: str, **payload) -> None:
         ev = {"kind": kind, "t_mono": monotime(), "t_wall": time.time()}
@@ -64,8 +72,10 @@ class FlightRecorder:
         during teardown would mask the original failure."""
         with self._lock:
             events = list(self._ring)
+            meta = dict(self.meta)
             self._n_dumps += 1
             n = self._n_dumps
+        rotate_dir = None
         if path is None:
             d = os.environ.get("REPRO_OBS_DIR", "obs_out")
             try:
@@ -76,10 +86,12 @@ class FlightRecorder:
                            for c in reason)[:48]
             path = os.path.join(
                 d, f"flightrec_{safe}_{os.getpid()}_{n}.json")
+            rotate_dir = d
         doc = {"reason": reason, "process": self.process,
                "pid": os.getpid(),
                "dumped_t_wall": time.time(),
                "dumped_t_mono": monotime(),
+               "meta": meta,
                "events": events,
                "trace_tail": _trace.get_tracer().tail(trace_tail),
                "metrics": _trace._jsonsafe(
@@ -92,6 +104,8 @@ class FlightRecorder:
             sys.stderr.write(f"[obs] flight-recorder dump failed: {e!r}\n")
             return ""
         sys.stderr.write(f"[obs] flight record ({reason}) -> {path}\n")
+        if rotate_dir is not None:
+            _rotate_dumps(rotate_dir)
         return path
 
     def install_excepthook(self) -> None:
@@ -111,6 +125,30 @@ class FlightRecorder:
             return prev(exc_type, exc, tb)
 
         sys.excepthook = hook
+
+
+def _rotate_dumps(d: str) -> None:
+    """Retention: repeated anomalies used to accumulate dumps in
+    ``$REPRO_OBS_DIR`` without bound.  Keep the newest
+    ``$REPRO_OBS_MAX_DUMPS`` (default 16) ``flightrec_*.json`` files,
+    unlinking oldest-first by mtime.  Never raises — retention must not
+    mask the failure being dumped."""
+    try:
+        cap = int(os.environ.get("REPRO_OBS_MAX_DUMPS", "16"))
+        if cap <= 0:
+            return
+        names = [os.path.join(d, f) for f in os.listdir(d)
+                 if f.startswith("flightrec_") and f.endswith(".json")]
+        if len(names) <= cap:
+            return
+        names.sort(key=lambda p: (os.path.getmtime(p), p))
+        for p in names[:len(names) - cap]:
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+    except Exception:
+        pass
 
 
 _global = FlightRecorder()

@@ -63,11 +63,15 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
-def apply_updates(params, grads, state, cfg: AdamWConfig):
-    """Returns (new_params, new_state, metrics)."""
+def apply_updates(params, grads, state, cfg: AdamWConfig, gnorm=None):
+    """Returns (new_params, new_state, metrics).  ``gnorm`` lets a caller
+    that already reduced the global grad norm (the fused numerics
+    sentinels in train_step.py) pass it in instead of paying the
+    reduction tree twice."""
     step = state["step"] + 1
     lr = schedule_lr(cfg, step)
-    gnorm = global_norm(grads)
+    if gnorm is None:
+        gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12)) \
         if cfg.grad_clip else 1.0
 

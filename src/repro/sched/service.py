@@ -201,10 +201,30 @@ class SchedulerService:
             spec = self.spec.replace(rank_speed=self.rank_speed)
             window = [self.ds.step_lengths(t) for t in range(t0, t0 + k)]
             load = self.load.copy() if transient else self.load
+            # scheduler provenance (obs/numerics + obs/replay): the exact
+            # pre-plan state this window is a deterministic function of,
+            # shaped like state_dict() — which we cannot call here, it
+            # takes _plan_lock.  Captured after the warm-key merge and
+            # BEFORE plan_window mutates load/templates, and stamped on
+            # every plan so it rides shipped plans to workers and lands
+            # in each step's StepProvenance record.
+            c = spec.coeffs
+            prov = {
+                "t0": int(t0), "k": int(k), "hdp": int(spec.hdp),
+                "transient": bool(transient),
+                "rank_speed": None if self.rank_speed is None
+                else [float(s) for s in self.rank_speed],
+                "load": [float(x) for x in load],
+                "templates": [[list(w), int(m), list(comp)]
+                              for (w, m), comp in self.templates.items()],
+                "coeffs": [float(c.a1), float(c.b1), float(c.g),
+                           float(c.a2), float(c.b2)],
+            }
             plans = plan_window(window, spec, templates=self.templates,
                                 load=load)
             for p, lengths in zip(plans, window):
                 p.stats["lengths"] = len(lengths)
+                p.stats["sched_prov"] = prov
             mx = get_metrics()
             mx.counter("sched.windows_planned").inc()
             mx.gauge("sched.templates").set(len(self.templates))

@@ -39,7 +39,7 @@ from repro.configs.base import ModelConfig
 from repro.core.planner import PlanSpec
 from repro.data.loader import WaveMaterializer
 from repro.models.transformer import logits_head
-from repro.obs import get_metrics, get_tracer
+from repro.obs import get_metrics, get_recorder, get_tracer
 from repro.parallel.sharding import Runtime
 from repro.serve.pool import Request, RequestPool
 from repro.train.serve_step import (_layer_cache_len, init_decode_cache,
@@ -218,6 +218,10 @@ class ServeEngine:
                 h_last = jnp.asarray(hidden[fl[req.plen - 1]])[None]
                 row = np.asarray(logits_head(self.params, self.cfg,
                                              h_last))[0]
+                if not np.isfinite(row).all():
+                    self._req[slot] = req
+                    self._fail_numerics(req, where="prefill")
+                    continue
                 tok = int(row.argmax())
                 req.generated.append(tok)
                 req.t_first = self.clock()
@@ -277,6 +281,10 @@ class ServeEngine:
         finished: List[Request] = []
         for i in active:
             req = self._req[i]
+            if not np.isfinite(lognp[i]).all():
+                self._fail_numerics(req, where="decode")
+                finished.append(req)
+                continue
             tok = int(lognp[i].argmax())
             req.generated.append(tok)
             req.decode_s += dt / len(active)
@@ -289,6 +297,29 @@ class ServeEngine:
                 finished.append(req)
                 self._retire(req)
         return finished
+
+    def _fail_numerics(self, req: Request, *, where: str) -> None:
+        """Non-finite logits fail the REQUEST, not the engine: the slab
+        slot frees, the pool completes the request with ``error`` set,
+        and the flight recorder keeps the postmortem trail.  The slot's
+        KV rows are scrubbed back to zero — a NaN row left in the slab
+        would poison the slot's next tenant through the masked-attention
+        sum (0 * NaN = NaN)."""
+        req.error = "nonfinite_logits"
+        if req.slot is not None:
+            self._scrub_slot(req.slot)
+        get_metrics().counter("serve.numerics_failed").inc()
+        get_recorder().record("serve_numerics", rid=req.rid, where=where,
+                              n_tokens=len(req.generated))
+        self._retire(req)
+
+    def _scrub_slot(self, slot: int) -> None:
+        for layer in self.cache["head_layers"]:
+            for name, buf in layer.items():
+                layer[name] = buf.at[slot].set(0)
+        for layer in self.cache["blocks"]:
+            for name, buf in layer.items():
+                layer[name] = buf.at[:, slot].set(0)
 
     def _retire(self, req: Request) -> None:
         if req.slot is not None:

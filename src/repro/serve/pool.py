@@ -40,6 +40,9 @@ class Request:
     # per-step logits rows, kept only when the engine is asked to
     # (parity tests) — [n_generated, vocab] worth of rows
     logits: Optional[List[np.ndarray]] = None
+    # set when the engine failed the request instead of dying with it
+    # (e.g. "nonfinite_logits" from the numerics guard)
+    error: Optional[str] = None
 
     @property
     def plen(self) -> int:
@@ -50,7 +53,8 @@ class Request:
                 "n_tokens": len(self.generated),
                 "t_submit": self.t_submit, "t_admit": self.t_admit,
                 "t_first": self.t_first, "t_done": self.t_done,
-                "prefill_s": self.prefill_s, "decode_s": self.decode_s}
+                "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+                "error": self.error}
 
 
 class RequestPool:

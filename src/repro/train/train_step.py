@@ -48,12 +48,24 @@ def make_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg: adamw.AdamWConfig):
 
 
 def make_accum_steps(cfg: ModelConfig, rt: Runtime,
-                     opt_cfg: adamw.AdamWConfig):
+                     opt_cfg: adamw.AdamWConfig, *,
+                     numerics: bool = True, guard: bool = False):
     """(grad_step, apply_step) for multi-wave gradient accumulation.
 
     ``grad_step`` is re-jitted per ring composition (rt.with_composition);
     ``apply_step`` runs once per global batch.
+
+    ``numerics`` fuses the in-graph health sentinels (obs/numerics.py:
+    per-group grad/param/update norms + non-finite count) into the apply
+    — one extra reduction tree, and the global grad norm it computes is
+    fed INTO the optimizer so the step still pays exactly one global-norm
+    reduction.  ``guard`` additionally makes the apply a no-op (params
+    and opt state selected back to their old values, bit-exactly) when
+    any grad element is non-finite; ``om["applied"]`` reports which
+    branch won.  With finite grads the guard's ``where`` selects the new
+    values, so guarded and unguarded steps are bit-identical.
     """
+    from repro.obs import numerics as NU
 
     def grad_step(params, grad_accum, batch, rt_wave: Runtime):
         (loss, metrics), grads = jax.value_and_grad(
@@ -62,9 +74,20 @@ def make_accum_steps(cfg: ModelConfig, rt: Runtime,
         return grad_accum, {"loss": loss, **metrics}
 
     def apply_step(params, opt_state, grad_accum):
-        params, opt_state, om = adamw.apply_updates(
-            params, grad_accum, opt_state, opt_cfg)
-        return params, opt_state, om
+        gnorm = adamw.global_norm(grad_accum) if numerics or guard else None
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grad_accum, opt_state, opt_cfg, gnorm=gnorm)
+        if numerics or guard:
+            sent = NU.sentinel_summary(grad_accum, params, new_params)
+            ok = (sent["grad_nonfinite"] == 0)
+            if guard:
+                sel = lambda n, o: jnp.where(ok, n, o)   # noqa: E731
+                new_params = jax.tree.map(sel, new_params, params)
+                new_opt = jax.tree.map(sel, new_opt, opt_state)
+            om = {**om, **sent,
+                  "applied": (ok if guard
+                              else jnp.ones((), jnp.bool_)).astype(jnp.int32)}
+        return new_params, new_opt, om
 
     return grad_step, apply_step
 

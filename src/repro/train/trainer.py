@@ -20,6 +20,7 @@ per-rank wave-time EMAs feed the scheduler's straggler weights.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
@@ -30,6 +31,7 @@ import numpy as np
 
 from repro import compat
 from repro.ckpt.checkpoint import CheckpointManager
+from repro.obs import numerics as numerics_mod
 from repro.configs.base import ModelConfig
 from repro.core.offload import offload_periods
 from repro.data.loader import GlobalScheduler, WaveMaterializer
@@ -82,6 +84,15 @@ class TrainerConfig:
                                      # dir, but only the rank-0 owner may
                                      # write — two processes renaming the
                                      # same step dir would race)
+    numerics_guard: bool = True      # skip the optimizer apply when any
+                                     # grad element is non-finite (the
+                                     # fleet keeps running: counter +
+                                     # advisory + flight-recorder dump
+                                     # instead of a poisoned model)
+    nan_fault: Optional[Dict] = None  # fault injection: {"step": k,
+                                      # "wave": i} poisons that wave's
+                                      # loss denominator with NaN (the
+                                      # numerics drill — obs/numerics)
 
 
 class Trainer:
@@ -93,6 +104,7 @@ class Trainer:
         self.opt_cfg = opt_cfg
         self.sched = scheduler
         self.tcfg = tcfg
+        self.seed = seed
         assert scheduler.hdp == rt.hdp_size, \
             (scheduler.hdp, rt.hdp_size, "plan world must match mesh")
         self.offload_ok = tcfg.use_offload and compat.offload_supported()
@@ -101,7 +113,8 @@ class Trainer:
         self.params = init_params(jax.random.PRNGKey(seed), cfg, rt)
         self.opt_state = adamw.init_state(self.params)
         self.step = 0
-        self.grad_step, self.apply_step = make_accum_steps(cfg, rt, opt_cfg)
+        self.grad_step, self.apply_step = make_accum_steps(
+            cfg, rt, opt_cfg, guard=tcfg.numerics_guard)
         self.pipelined = rt.num_stages > 1
         if self.pipelined:
             assert_pipeline_ready(cfg, rt)
@@ -142,7 +155,52 @@ class Trainer:
         # step loop (obs.monotime = time.perf_counter); wall clock only
         # appears as the human-readable ``t_wall`` record field
         self._clock = monotime
+        # numerics observatory: online monitor + per-step provenance
+        # (obs/numerics.py).  ``last_numerics`` / ``last_wave_findings``
+        # are ctrl-worker hooks: the step summary rides step_done, wave
+        # findings ride the streamed per-dispatch telemetry records.
+        self.numerics = numerics_mod.NumericsMonitor()
+        self.last_numerics: Optional[Dict] = None
+        self.last_wave_findings: list = []
+        self._last_ckpt_step: Optional[int] = None
+        self._numerics_dumps = 0
+        self._numerics_dump_cap = 2
+        self._numerics_dump_reason: Optional[str] = None
         self._attach_materializer(scheduler)
+        self._publish_manifest()
+
+    def _publish_manifest(self) -> None:
+        """Land the run's reproduction recipe in the flight recorder's
+        meta block, so every dump is self-describing for obs/replay."""
+        NU = numerics_mod
+        try:
+            get_recorder().set_meta("run_manifest", {
+                "model": NU.model_to_dict(self.cfg),
+                "spec": NU.spec_to_dict(self.sched.spec),
+                "dataset": NU.dataset_to_dict(self.sched.ds),
+                "opt": dataclasses.asdict(self.opt_cfg),
+                "runtime": {
+                    "hdp": int(self.rt.hdp_size), "tp": int(self.rt.tp),
+                    "num_stages": int(self.rt.num_stages),
+                    "remat": self.rt.remat,
+                    "kv_chunk": int(self.rt.kv_chunk),
+                    "attn_impl": self.rt.attn_impl,
+                    "seq_parallel": bool(self.rt.seq_parallel),
+                },
+                "trainer": {
+                    "capacity": self.tcfg.capacity, "mode": self.tcfg.mode,
+                    "strategy": self.tcfg.strategy,
+                    "ckpt_dir": self.tcfg.ckpt_dir,
+                    "ckpt_every": self.tcfg.ckpt_every,
+                    "max_round_waves": self.tcfg.max_round_waves,
+                    "attn_impl": self.tcfg.attn_impl,
+                    "numerics_guard": self.tcfg.numerics_guard,
+                    "nan_fault": self.tcfg.nan_fault,
+                },
+                "seed": int(self.seed),
+            })
+        except Exception:       # manifest is best-effort observability
+            pass
 
     # ------------------------------------------------------------------
     def _attach_materializer(self, scheduler) -> None:
@@ -218,6 +276,7 @@ class Trainer:
             return False
         _, self.params, self.opt_state, data_state = res
         self.step = int(data_state["step"])
+        self._last_ckpt_step = self.step
         self.load_ctrl_state(data_state)
         return True
 
@@ -262,6 +321,7 @@ class Trainer:
             self.cfg.num_layers, quadratic=new_hdp_scheduler.spec.quadratic,
             ema=self.tcfg.straggler_ema)
         self._attach_materializer(new_hdp_scheduler)
+        self._publish_manifest()    # the spec (hdp) changed
 
     # ------------------------------------------------------------------
     def _observe(self, waves, measured, fresh_compile: bool,
@@ -379,10 +439,36 @@ class Trainer:
                     mx.gauge("comm.residual").set(led.comm_residual())
         return grads, loss, dt
 
+    # -- numerics observatory hooks ------------------------------------
+
+    def _nan_fault_hits(self, idx: int) -> bool:
+        nf = self.tcfg.nan_fault
+        return bool(nf) and self.step == int(nf.get("step", -1)) \
+            and idx == int(nf.get("wave", 0))
+
+    def _note_findings(self, findings: list, mx) -> None:
+        """Land monitor findings in the ring + metrics the moment they
+        fire (mid-step for wave findings — the worker streams them), and
+        arm a bounded flight-recorder dump on severe ones.  The dump
+        itself waits until the step's provenance record has landed, so
+        it always carries its own reproduction recipe."""
+        if not findings:
+            return
+        rec = get_recorder()
+        for f in findings:
+            mx.counter("numerics.findings").inc()
+            rec.record("numerics_finding",
+                       **{k: v for k, v in f.items() if k != "kind"})
+            if f["severity"] >= numerics_mod.NONFINITE_SEVERITY \
+                    and self._numerics_dumps < self._numerics_dump_cap \
+                    and self._numerics_dump_reason is None:
+                self._numerics_dump_reason = f"numerics_{f['reason']}"
+
     def train_step(self) -> Dict:
         tr = get_tracer()
         mx = get_metrics()
         t0 = self._clock()
+        n_find0 = len(self.numerics.findings)
         with tr.span("plan", step=self.step):
             if self.tcfg.sched_async and hasattr(self.sched, "get_step"):
                 plan, pre_waves = self.sched.get_step(self.step)
@@ -412,7 +498,8 @@ class Trainer:
                     stacked = next(round_iter)
                 rd = rounds[i]
                 batch = {k: jnp.asarray(v) for k, v in stacked.items()}
-                batch["denom"] = jnp.float32(denom)
+                batch["denom"] = jnp.float32(
+                    float("nan") if self._nan_fault_hits(i) else denom)
                 fn, fresh = self._round_fn(rd.composition, rd.c_mult,
                                            rd.offload_ratio,
                                            len(rd.wave_ids))
@@ -423,6 +510,9 @@ class Trainer:
                     offload_ratio=rd.offload_ratio,
                     n_waves=len(rd.wave_ids))
                 losses.append(loss)
+                self.last_wave_findings = \
+                    self.numerics.observe_wave(self.step, i, loss)
+                self._note_findings(self.last_wave_findings, mx)
                 mx.histogram("trainer.dispatch_s").observe(dt)
                 wall = dt
                 if self.wave_time_fn is not None:
@@ -445,7 +535,8 @@ class Trainer:
                     lw = next(wave_iter)
                 wave = plan.waves[i]
                 batch = {k: jnp.asarray(v) for k, v in lw.batch.items()}
-                batch["denom"] = jnp.float32(denom)
+                batch["denom"] = jnp.float32(
+                    float("nan") if self._nan_fault_hits(i) else denom)
                 fn, fresh = self._wave_fn(lw.composition, lw.c_mult,
                                           lw.offload_ratio)
                 grads, loss, dt = self._dispatch(
@@ -453,6 +544,9 @@ class Trainer:
                     fresh, waves=[wave], c_mult=lw.c_mult,
                     offload_ratio=lw.offload_ratio)
                 losses.append(loss)
+                self.last_wave_findings = \
+                    self.numerics.observe_wave(self.step, i, loss)
+                self._note_findings(self.last_wave_findings, mx)
                 mx.histogram("trainer.dispatch_s").observe(dt)
                 wall = dt
                 if self.wave_time_fn is not None:
@@ -465,7 +559,12 @@ class Trainer:
         with tr.span("apply", step=self.step):
             self.params, self.opt_state, om = jax.jit(self.apply_step)(
                 self.params, self.opt_state, grads)
-            om = {k: float(v) for k, v in om.items()}   # blocks: applied
+            # ONE host fetch for the whole fused sentinel summary
+            # (grad_norm + per-group norms + non-finite count + applied
+            # flag) — the step pays the same single sync it used to pay
+            # for grad_norm alone
+            om = {k: np.asarray(v).item()
+                  for k, v in jax.device_get(om).items()}  # blocks: applied
         # straggler feedback: *measured* per-rank speeds (the old loop
         # EMA'd the plan's own modeled costs — on a balanced plan every
         # rank looked identical and a real straggler was invisible)
@@ -498,12 +597,48 @@ class Trainer:
         get_recorder().record("train_step", step=self.step,
                               loss=rec["loss"], waves=rec["waves"],
                               wall_s=rec["wall_s"])
+        # numerics observatory: step-level monitor pass + provenance
+        step_idx = self.step - 1        # the step index just executed
+        self._note_findings(
+            self.numerics.observe_step(step_idx, rec["loss"], om), mx)
+        applied = int(om.get("applied", 1))
+        if applied == 0:
+            mx.counter("numerics.guard_skips").inc()
+        mx.gauge("numerics.grad_nonfinite").set(
+            float(om.get("grad_nonfinite", 0)))
+        step_findings = self.numerics.findings[n_find0:]
+        prov = numerics_mod.StepProvenance(
+            step=step_idx, plan_hash=numerics_mod.plan_fingerprint(plan),
+            denom=int(plan.denom), n_waves=len(plan.waves),
+            wave_losses=[float(l) for l in losses],
+            sentinels={k: v for k, v in om.items() if k != "applied"},
+            applied=applied, ckpt_step=self._last_ckpt_step,
+            sched_prov=plan.stats.get("sched_prov"),
+            n_seqs=plan.stats.get("lengths"),
+            nan_fault=self.tcfg.nan_fault
+            if self.tcfg.nan_fault
+            and int(self.tcfg.nan_fault.get("step", -1)) == step_idx
+            else None)
+        get_recorder().record("step_provenance", **prov.to_record())
+        self.last_numerics = {
+            "step": step_idx, "loss": rec["loss"],
+            "grad_norm": rec["grad_norm"],
+            "grad_nonfinite": int(om.get("grad_nonfinite", 0)),
+            "applied": applied, "findings": step_findings}
+        if self._numerics_dump_reason is not None:
+            # severe finding this step: dump AFTER the provenance record
+            # landed, so the dump is replayable (bounded by the cap —
+            # retention in recorder.dump rotates old files regardless)
+            self._numerics_dumps += 1
+            get_recorder().dump(self._numerics_dump_reason)
+            self._numerics_dump_reason = None
         mx.export_step(self.step)
         if self.ckpt and self.tcfg.ckpt_save \
                 and self.step % self.tcfg.ckpt_every == 0:
             with tr.span("checkpoint", step=self.step):
                 self.ckpt.save(self.step, self.params, self.opt_state,
                                self.data_state())
+                self._last_ckpt_step = self.step
         return rec
 
     def run(self, steps: Optional[int] = None):
@@ -513,4 +648,5 @@ class Trainer:
         if self.ckpt and self.tcfg.ckpt_save:
             self.ckpt.save(self.step, self.params, self.opt_state,
                            self.data_state(), block=True)
+            self._last_ckpt_step = self.step
             self.ckpt.wait()
